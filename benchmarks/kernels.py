@@ -1,0 +1,63 @@
+"""Kernel micro-bench: interpret-mode wall time is meaningless for TPU perf,
+so the derived column reports the *analytic* VMEM working set and arithmetic
+intensity per kernel tile — the numbers that justify the BlockSpec choices
+(see DESIGN.md §7)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(f, *args, iters=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench():
+    rows = []
+
+    # flash attention tile: bq=256, bkv=512, D=128 (bf16)
+    bq, bkv, D = 256, 512, 128
+    vmem = (bq * D + 2 * bkv * D) * 2 + bq * bkv * 4 + bq * (D + 2) * 4
+    flops = 2 * bq * bkv * D * 2
+    rows.append(("kernels/flash_attention_tile", 0.0,
+                 f"vmem_KB={vmem // 1024};ai_flops_per_byte="
+                 f"{flops / vmem:.0f}"))
+
+    # ssd tile: chunk=128, N=128, P=64
+    L, N, P = 128, 128, 64
+    vmem = (L * P + 2 * L * N) * 2 + L * L * 4 + N * P * 4
+    flops = 2 * L * L * N + 2 * L * L * P + 4 * L * N * P
+    rows.append(("kernels/ssd_tile", 0.0,
+                 f"vmem_KB={vmem // 1024};ai={flops / vmem:.0f}"))
+
+    # moe ffn tile: bc=256, d=4096, bf=512
+    bc, d, bf = 256, 4096, 512
+    vmem = (bc * d + 2 * d * bf + bf * d) * 2 + bc * d * 4
+    flops = 2 * bc * d * bf * 3
+    rows.append(("kernels/moe_ffn_tile", 0.0,
+                 f"vmem_KB={vmem // 1024};ai={flops / vmem:.0f}"))
+
+    # interpret-mode correctness spot check timing (CPU, not perf)
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 1, 256, 64))
+    v = jax.random.normal(ks[2], (1, 1, 256, 64))
+    from repro.kernels.flash_attention import flash_attention_fwd
+    t = _time(lambda a, b, c: flash_attention_fwd(a, b, c, bq=128, bkv=128),
+              q, k, v)
+    rows.append(("kernels/flash_interpret_256", t * 1e6,
+                 "correctness_mode=interpret"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

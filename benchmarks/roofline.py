@@ -1,0 +1,72 @@
+"""Roofline table — reads the dry-run artifacts (results/*.jsonl) and
+renders the per-(arch x shape x mesh) terms for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(name):
+    path = os.path.join(RESULTS, name)
+    by_cell = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                by_cell[(r["arch"], r["shape"])] = r  # keep-last (re-runs)
+    return list(by_cell.values())
+
+
+def render_table(recs):
+    hdr = (f"| {'arch':24s} | {'shape':11s} | {'mesh':7s} | {'strat':9s} "
+           f"| {'compute':>9s} | {'memory':>9s} | {'coll':>9s} "
+           f"| {'bound':10s} | {'MFU':>6s} | {'GB/dev':>7s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    lines = [hdr, sep]
+    for r in recs:
+        if r.get("status") == "skip":
+            lines.append(
+                f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} "
+                f"| {'—':9s} | {'SKIP':>9s} | {r['reason']:>9s} |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} "
+                f"| {'—':9s} | {'ERROR':>9s} |")
+            continue
+        peak = (r.get("memory") or {}).get("peak_bytes", 0) / 1e9
+        lines.append(
+            f"| {r['arch']:24s} | {r['shape']:11s} | {r['mesh']:7s} "
+            f"| {r.get('strategy', '?'):9s} "
+            f"| {r['compute_s'] * 1e3:8.1f}ms | {r['memory_s'] * 1e3:8.1f}ms "
+            f"| {r['collective_s'] * 1e3:8.1f}ms | {r['dominant']:10s} "
+            f"| {r['mfu'] * 100:5.1f}% | {peak:7.2f} |")
+    return "\n".join(lines)
+
+
+def bench():
+    rows = []
+    for name, label in (("dryrun_single.jsonl", "16x16"),
+                        ("dryrun_multi.jsonl", "2x16x16")):
+        recs = load(name)
+        ok = [r for r in recs if r.get("status") == "ok"]
+        if not ok:
+            continue
+        for r in ok:
+            rows.append((
+                f"roofline/{label}/{r['arch']}/{r['shape']}",
+                r["step_time_s"] * 1e6,
+                f"bound={r['dominant']};mfu={r['mfu']:.3f}"))
+    if not rows:
+        rows.append(("roofline/no_artifacts", 0.0, "run dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh_file in ("dryrun_single.jsonl", "dryrun_multi.jsonl"):
+        recs = load(mesh_file)
+        if recs:
+            print(f"\n=== {mesh_file} ===")
+            print(render_table(recs))

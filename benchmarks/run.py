@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  lifecycle       Fig. 4a  slice lifecycle breakdown (3 slice shapes)
+  amortization    Fig. 4b/c overhead amortization on long jobs
+  sharing         Fig. 5   FIFO multi-job resource sharing
+  disagg_overhead §2       disaggregated-fabric transfer vs compute-bound
+  scaling         Fig. 4a  runtask vs slice placement (ICI vs DCN model)
+  kernels         —        per-kernel interpret-mode timing vs jnp oracle
+  roofline        —        roofline terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (amortization, disagg_overhead, kernels,
+                            lifecycle, roofline, scaling, sharing)
+
+    modules = [
+        ("lifecycle", lifecycle),
+        ("amortization", amortization),
+        ("sharing", sharing),
+        ("disagg_overhead", disagg_overhead),
+        ("scaling", scaling),
+        ("kernels", kernels),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.bench():
+                print(",".join(str(x) for x in row))
+            sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Paper Fig. 4a runtask rows — training time vs slice shape.
+
+On real hardware 1node-4gpu beats 4node-1gpu because intra-node links beat
+the disaggregated fabric. The TPU-pod analogue is intra-pod ICI vs
+cross-pod DCN: we model runtask for the same job on (a) an ICI-contiguous
+slice and (b) a pod-spanning slice using the roofline terms from the
+dry-run artifacts (collective term switches from ICI to DCN bandwidth)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.analysis import DCN_BW, ICI_BW
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(path):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def bench():
+    rows = []
+    singles = {(r["arch"], r["shape"]): r
+               for r in _load(os.path.join(RESULTS, "dryrun_single.jsonl"))
+               if r.get("status") == "ok"}
+    for arch in ("qwen2.5-3b", "mamba2-370m"):
+        r = singles.get((arch, "train_4k"))
+        if not r:
+            continue
+        coll_bytes = sum(r["coll_bytes_per_dev"].values())
+        contiguous = max(r["compute_s"], r["memory_s"],
+                         coll_bytes / ICI_BW)
+        spanning = max(r["compute_s"], r["memory_s"],
+                       coll_bytes / DCN_BW)
+        rows.append((f"scaling/{arch}/ici_slice",
+                     contiguous * 1e6,
+                     f"modeled_step_s={contiguous:.3f}"))
+        rows.append((f"scaling/{arch}/dcn_spanning_slice",
+                     spanning * 1e6,
+                     f"slowdown={spanning / contiguous:.2f}x"))
+    if not rows:
+        rows.append(("scaling/no_dryrun_artifacts", 0.0,
+                     "run repro.launch.dryrun first"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench():
+        print(",".join(str(x) for x in r))

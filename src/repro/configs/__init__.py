@@ -1,0 +1,15 @@
+"""One module per assigned architecture (exact published config) plus a
+``smoke()`` reduced config of the same family for CPU tests."""
+
+CONFIG_MODULES = [
+    "qwen2_5_3b",
+    "gemma3_1b",
+    "minitron_8b",
+    "smollm_360m",
+    "whisper_medium",
+    "qwen2_vl_7b",
+    "mamba2_370m",
+    "qwen3_moe_235b_a22b",
+    "granite_moe_1b_a400m",
+    "zamba2_2_7b",
+]

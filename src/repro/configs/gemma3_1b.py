@@ -1,0 +1,35 @@
+"""gemma3-1b [dense] — 5:1 local:global sliding-window, 256k vocab
+[hf:google/gemma-3-1b-pt]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("gemma3-1b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        family="dense",
+        n_layers=26,
+        d_model=1152,
+        n_heads=4,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=6912,
+        vocab_size=262_144,
+        qk_norm=True,
+        rope_theta=10_000.0,         # local layers
+        rope_theta_global=1_000_000.0,  # global layers
+        sliding_window=512,
+        global_every=6,              # every 6th layer global (5:1)
+        act="gelu",
+        tie_embeddings=True,
+        embed_scale=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="gemma3-1b-smoke", n_layers=4, d_model=64, n_heads=2,
+        n_kv_heads=1, head_dim=32, d_ff=128, vocab_size=256,
+        sliding_window=8, global_every=2, remat="none")

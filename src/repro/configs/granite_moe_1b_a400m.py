@@ -1,0 +1,34 @@
+"""granite-moe-1b-a400m [moe] — 32 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("granite-moe-1b-a400m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=64,
+        d_ff=0,
+        vocab_size=49_155,
+        rope_theta=10_000.0,
+        n_experts=32,
+        top_k=8,
+        moe_d_ff=512,
+        capacity_factor=1.25,
+        act="silu",
+        tie_embeddings=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="granite-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, vocab_size=256, n_experts=4, top_k=2,
+        moe_d_ff=32, remat="none")

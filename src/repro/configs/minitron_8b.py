@@ -1,0 +1,29 @@
+"""minitron-8b [dense] — pruned nemotron, squared-ReLU MLP
+[arXiv:2407.14679]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("minitron-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,
+        vocab_size=256_000,
+        rope_theta=10_000.0,
+        act="relu2",  # nemotron squared-ReLU
+        tie_embeddings=False,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="minitron-8b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256, remat="none")

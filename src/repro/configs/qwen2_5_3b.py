@@ -1,0 +1,29 @@
+"""qwen2.5-3b [dense] — GQA (16Q/2KV), QKV bias [hf:Qwen/Qwen2.5-3B]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("qwen2.5-3b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-3b",
+        family="dense",
+        n_layers=36,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=2,
+        head_dim=128,
+        d_ff=11008,
+        vocab_size=151_936,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        act="silu",
+        tie_embeddings=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="qwen2.5-3b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256, remat="none")

@@ -1,0 +1,35 @@
+"""qwen2-vl-7b [vlm] — M-RoPE, dynamic-resolution backbone; vision tower
+stubbed to precomputed patch embeddings per the assignment
+[arXiv:2409.12191]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("qwen2-vl-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b",
+        family="vlm",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=18944,
+        vocab_size=152_064,
+        qkv_bias=True,
+        rope_kind="mrope",
+        mrope_sections=(16, 24, 24),  # (t, h, w) split of head_dim//2
+        rope_theta=1_000_000.0,
+        n_vision_patches=256,  # stub image grid at sequence start
+        act="silu",
+        tie_embeddings=False,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="qwen2-vl-7b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+        mrope_sections=(2, 3, 3), n_vision_patches=4, remat="none")

@@ -1,0 +1,35 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, GQA 64Q/4KV, qk-norm
+[hf:Qwen/Qwen3-235B-A22B]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("qwen3-moe-235b-a22b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        n_layers=94,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=0,
+        vocab_size=151_936,
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        n_experts=128,
+        top_k=8,
+        moe_d_ff=1536,
+        capacity_factor=1.25,
+        act="silu",
+        tie_embeddings=False,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, vocab_size=256, n_experts=4, top_k=2,
+        moe_d_ff=32, remat="none")

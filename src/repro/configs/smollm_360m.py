@@ -1,0 +1,29 @@
+"""smollm-360m [dense] — llama-arch small model
+[hf:HuggingFaceTB/SmolLM-360M]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("smollm-360m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="smollm-360m",
+        family="dense",
+        n_layers=32,
+        d_model=960,
+        n_heads=15,
+        n_kv_heads=5,
+        head_dim=64,
+        d_ff=2560,
+        vocab_size=49_152,
+        rope_theta=10_000.0,
+        act="silu",
+        tie_embeddings=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="smollm-360m-smoke", n_layers=2, d_model=60, n_heads=3,
+        n_kv_heads=1, head_dim=20, d_ff=128, vocab_size=256, remat="none")

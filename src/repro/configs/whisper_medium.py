@@ -1,0 +1,33 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed to precomputed
+frame embeddings per the assignment [arXiv:2212.04356]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("whisper-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium",
+        family="audio",
+        n_layers=24,           # decoder layers
+        n_encoder_layers=24,
+        encoder_seq=1500,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,         # MHA
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=51_865,
+        qkv_bias=True,
+        rope_kind="none",      # learned/sinusoidal positions
+        act="gelu",
+        tie_embeddings=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="whisper-medium-smoke", n_layers=2, n_encoder_layers=2,
+        encoder_seq=16, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256, remat="none")

@@ -1,0 +1,36 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention block
+[arXiv:2411.15242]."""
+from repro.models.config import ModelConfig
+from repro.models.registry import register_config
+
+
+@register_config("zamba2-2.7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        n_layers=54,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32_000,
+        rope_theta=10_000.0,
+        ssm_state=64,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_conv_width=4,
+        ssm_chunk=128,
+        attn_every=6,  # shared attn+mlp block after every 6th mamba layer
+        act="gelu",
+        tie_embeddings=True,
+        remat="full",
+    )
+
+
+def smoke() -> ModelConfig:
+    return config().replace(
+        name="zamba2-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=256, ssm_state=16,
+        ssm_head_dim=16, ssm_chunk=8, attn_every=2, remat="none")

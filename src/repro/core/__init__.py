@@ -1,0 +1,6 @@
+from repro.core.pool import DevicePool, Lease, DeviceInfo, AllocationError  # noqa: F401
+from repro.core.slice import Slice, SliceState  # noqa: F401
+from repro.core.job import JobSpec, TaskSpec, JobStatus  # noqa: F401
+from repro.core.rm import FlowOSRM  # noqa: F401
+from repro.core.meta_accel import MetaAccelerator  # noqa: F401
+from repro.core.elastic import ElasticController  # noqa: F401

@@ -1,0 +1,133 @@
+"""Elasticity, fault tolerance and straggler mitigation.
+
+At 1000+ nodes, failures are continuous background noise, not exceptions.
+The controller implements the three mechanisms a production fleet needs:
+
+1. **Failure recovery** — on device failure FlowOS-RM shrinks the slice to
+   the largest feasible mesh from the remaining healthy pool, and the job
+   resumes from the last checkpoint (state re-shards onto the new mesh via
+   ``CheckpointManager.restore(shardings=...)``).
+2. **Straggler mitigation** — per-node step-time EWMAs; a node persistently
+   slower than the median by ``straggler_factor`` for ``patience`` steps is
+   evicted (rebuilt slice excludes it). This is the disaggregated-pool
+   advantage the paper argues for: swap a slow accelerator, keep the node.
+3. **Elastic rescale** — when the pool frees up, a job below its preferred
+   size can grow at the next checkpoint boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.pool import DevicePool, Lease
+
+
+@dataclasses.dataclass
+class ElasticDecision:
+    action: str  # "none" | "shrink" | "evict" | "grow"
+    n_devices: Optional[int] = None
+    evict_nodes: Tuple[int, ...] = ()
+    reason: str = ""
+
+
+def largest_feasible(n_healthy: int, min_devices: int = 1) -> int:
+    """Largest power-of-two slice size <= n_healthy (mesh-factorable)."""
+    if n_healthy < min_devices:
+        return 0
+    return 2 ** int(math.floor(math.log2(n_healthy)))
+
+
+def mesh_shape_for(n: int, model_parallel: int = 1) -> Tuple[int, int]:
+    """(data, model) factorization for n devices."""
+    model = min(model_parallel, n)
+    while n % model != 0:
+        model //= 2
+    return (n // model, max(model, 1))
+
+
+class ElasticController:
+    def __init__(self, pool: DevicePool, straggler_factor: float = 1.5,
+                 patience: int = 3, ewma: float = 0.5):
+        self.pool = pool
+        self.straggler_factor = straggler_factor
+        self.patience = patience
+        self.ewma = ewma
+        self._node_times: Dict[int, float] = {}
+        self._slow_streak: Dict[int, int] = {}
+
+    # -- straggler detection ------------------------------------------------
+    def record_step(self, per_node_seconds: Dict[int, float]):
+        for node, t in per_node_seconds.items():
+            prev = self._node_times.get(node, t)
+            self._node_times[node] = (1 - self.ewma) * prev + self.ewma * t
+
+    def stragglers(self) -> List[int]:
+        if len(self._node_times) < 2:
+            return []
+        times = sorted(self._node_times.values())
+        median = times[len(times) // 2]
+        out = []
+        for node, t in self._node_times.items():
+            if t > self.straggler_factor * median:
+                self._slow_streak[node] = self._slow_streak.get(node, 0) + 1
+            else:
+                self._slow_streak[node] = 0
+            if self._slow_streak.get(node, 0) >= self.patience:
+                out.append(node)
+        return out
+
+    # -- decisions ------------------------------------------------------------
+    def check(self, lease: Lease, preferred_devices: int) -> ElasticDecision:
+        """Called at step/checkpoint boundaries by the training driver."""
+        failed = self.pool.failed_in_lease(lease)
+        if failed:
+            healthy = lease.n - len(failed)
+            target = largest_feasible(healthy)
+            return ElasticDecision(
+                action="shrink", n_devices=target,
+                reason=f"{len(failed)} device(s) failed in lease")
+        slow = self.stragglers()
+        if slow:
+            lease_nodes = lease.nodes
+            evict = tuple(n for n in slow if n in lease_nodes)
+            if evict:
+                return ElasticDecision(
+                    action="evict", evict_nodes=evict,
+                    n_devices=largest_feasible(
+                        lease.n - sum(1 for d in lease.devices
+                                      if d.node in evict)),
+                    reason=f"straggler node(s) {evict}")
+        if lease.n < preferred_devices:
+            extra = len(self.pool.free_devices())
+            grown = largest_feasible(lease.n + extra)
+            if grown > lease.n and grown <= preferred_devices:
+                return ElasticDecision(
+                    action="grow", n_devices=grown,
+                    reason="pool freed up; grow toward preferred size")
+        return ElasticDecision(action="none")
+
+    # -- slice rebuild ----------------------------------------------------------
+    def rebuild(self, slice_, decision: ElasticDecision,
+                model_parallel: int = 1):
+        """Release the old lease and build a replacement slice. The caller
+        restores the latest checkpoint onto the new mesh's shardings."""
+        from repro.core.slice import Slice
+
+        pool = slice_.pool
+        if slice_.lease is not None:
+            pool.release(slice_.lease)
+            slice_.lease = None
+        if not decision.n_devices:
+            raise RuntimeError("no feasible slice size after failure")
+        shape = mesh_shape_for(decision.n_devices, model_parallel)
+        new = Slice(name=slice_.name + "+rebuilt", pool=pool,
+                    n_devices=decision.n_devices, mesh_shape=shape,
+                    axis_names=("data", "model"), kind=slice_.kind)
+        new.attach_device()
+        new.launch_machine()
+        # reset straggler state for evicted nodes
+        for node in decision.evict_nodes:
+            self._node_times.pop(node, None)
+            self._slow_streak.pop(node, None)
+        return new

@@ -1,0 +1,87 @@
+"""Job / task descriptors + the REST-like submission surface.
+
+A job is a set of tasks (paper §4: single-node and MPI-type multi-node jobs
+are both supported — here: single-slice jobs and meta-accelerator jobs whose
+tasks land on distinct sub-slices). Specs are plain serializable dataclasses
+so the dict round-trip mirrors the paper's REST API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+
+class JobStatus(enum.Enum):
+    QUEUED = "queued"
+    ALLOCATING = "allocating"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """One task of a job, bound to one (sub-)slice."""
+    name: str
+    n_devices: int
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    axis_names: Optional[Tuple[str, ...]] = None
+    kind: Optional[str] = None          # accelerator kind (meta-accel)
+    arch: Optional[str] = None          # model architecture id
+    shape: Optional[str] = None         # input-shape cell name
+    steps: int = 0                      # training steps (0 = driver-defined)
+    # non-serializable hooks (driver-provided):
+    prepare_fn: Optional[Callable] = None
+    task_fn: Optional[Callable] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if k not in ("prepare_fn", "task_fn")}
+
+
+@dataclasses.dataclass
+class JobSpec:
+    name: str
+    tasks: List[TaskSpec]
+    priority: int = 0
+
+    @property
+    def n_devices(self) -> int:
+        return sum(t.n_devices for t in self.tasks)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "priority": self.priority,
+                "tasks": [t.to_dict() for t in self.tasks]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "JobSpec":
+        tasks = [TaskSpec(**t) for t in d["tasks"]]
+        return cls(name=d["name"], tasks=tasks,
+                   priority=d.get("priority", 0))
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    spec: JobSpec
+    status: JobStatus = JobStatus.QUEUED
+    slices: List[Any] = dataclasses.field(default_factory=list)
+    result: Any = None
+    error: Optional[str] = None
+    submit_time: float = 0.0
+    start_time: Optional[float] = None
+    end_time: Optional[float] = None
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "job_id": self.job_id,
+            "name": self.spec.name,
+            "status": self.status.value,
+            "submit_time": self.submit_time,
+            "start_time": self.start_time,
+            "end_time": self.end_time,
+            "error": self.error,
+            "breakdowns": [s.breakdown() for s in self.slices],
+        }

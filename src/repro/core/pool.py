@@ -1,0 +1,179 @@
+"""Disaggregated accelerator pool (the FiC resource pool).
+
+The pool tracks every accelerator in the fleet — which node block it lives
+on, its kind (the paper's meta-accelerator heterogeneity: GPU + FPGA pools;
+here: device kinds), health, and current lease. ``acquire`` implements the
+placement policy: prefer topology-contiguous blocks (the TPU analogue of the
+paper's "attach the closest remote device through the FiC network" — slices
+spanning pods pay slower links, see DESIGN.md §2).
+
+Devices may be real ``jax.Device`` objects (dry-run / training) or virtual
+descriptors (scheduler-level tests and 1000+-node simulations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class DeviceInfo:
+    uid: int
+    node: int              # host / node-block index
+    pod: int               # ICI domain (pod) index
+    kind: str = "tpu"      # accelerator kind (meta-accelerator support)
+    healthy: bool = True
+    device: Any = None     # underlying jax.Device, if real
+    lease_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Lease:
+    lease_id: int
+    devices: List[DeviceInfo]
+    kind: str
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    @property
+    def pods(self) -> set:
+        return {d.pod for d in self.devices}
+
+    @property
+    def nodes(self) -> set:
+        return {d.node for d in self.devices}
+
+    @property
+    def cross_pod(self) -> bool:
+        return len(self.pods) > 1
+
+    def jax_devices(self) -> list:
+        return [d.device for d in self.devices]
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+class DevicePool:
+    """Lease accounting + contiguity-aware placement over the fleet."""
+
+    def __init__(self, devices: Sequence[DeviceInfo]):
+        self._devices = list(devices)
+        self._by_uid = {d.uid: d for d in self._devices}
+        self._lock = threading.RLock()
+        self._lease_counter = itertools.count()
+        self._leases: Dict[int, Lease] = {}
+
+    # -- constructors ----------------------------------------------------
+    @classmethod
+    def from_jax_devices(cls, devices=None, devices_per_node: int = 8,
+                         devices_per_pod: int = 256, kind: str = "tpu"):
+        import jax
+        devices = list(devices if devices is not None else jax.devices())
+        infos = [DeviceInfo(uid=i, node=i // devices_per_node,
+                            pod=i // devices_per_pod, kind=kind, device=d)
+                 for i, d in enumerate(devices)]
+        return cls(infos)
+
+    @classmethod
+    def virtual(cls, n_devices: int, devices_per_node: int = 8,
+                devices_per_pod: int = 256, kinds: Optional[dict] = None):
+        """Virtual fleet; ``kinds`` maps uid-range tuples to kind names."""
+        infos = []
+        for i in range(n_devices):
+            kind = "tpu"
+            for (lo, hi), k in (kinds or {}).items():
+                if lo <= i < hi:
+                    kind = k
+            infos.append(DeviceInfo(uid=i, node=i // devices_per_node,
+                                    pod=i // devices_per_pod, kind=kind))
+        return cls(infos)
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def size(self) -> int:
+        return len(self._devices)
+
+    def free_devices(self, kind: Optional[str] = None) -> List[DeviceInfo]:
+        with self._lock:
+            return [d for d in self._devices
+                    if d.healthy and d.lease_id is None
+                    and (kind is None or d.kind == kind)]
+
+    def utilization(self) -> float:
+        with self._lock:
+            healthy = [d for d in self._devices if d.healthy]
+            leased = [d for d in healthy if d.lease_id is not None]
+            return len(leased) / max(len(healthy), 1)
+
+    def leases(self) -> List[Lease]:
+        with self._lock:
+            return list(self._leases.values())
+
+    # -- allocation --------------------------------------------------------
+    def can_allocate(self, n: int, kind: Optional[str] = None) -> bool:
+        return len(self.free_devices(kind)) >= n
+
+    def acquire(self, n: int, kind: Optional[str] = None,
+                prefer_contiguous: bool = True) -> Lease:
+        """attach-device: lease n devices, preferring a contiguous block
+        within one pod (lowest-latency ICI placement)."""
+        with self._lock:
+            free = self.free_devices(kind)
+            if len(free) < n:
+                raise AllocationError(
+                    f"need {n} {kind or 'any'} devices, {len(free)} free")
+            chosen: Optional[List[DeviceInfo]] = None
+            if prefer_contiguous:
+                chosen = self._contiguous_block(free, n)
+            if chosen is None:
+                chosen = free[:n]  # fragmented fallback (may span pods)
+            lease = Lease(next(self._lease_counter), chosen,
+                          kind or "any")
+            for d in chosen:
+                d.lease_id = lease.lease_id
+            self._leases[lease.lease_id] = lease
+            return lease
+
+    def _contiguous_block(self, free: List[DeviceInfo],
+                          n: int) -> Optional[List[DeviceInfo]]:
+        """First contiguous uid-run of length n, preferring single-pod."""
+        free_sorted = sorted(free, key=lambda d: d.uid)
+        for single_pod in (True, False):
+            run: List[DeviceInfo] = []
+            for d in free_sorted:
+                if run and (d.uid != run[-1].uid + 1
+                            or (single_pod and d.pod != run[-1].pod)):
+                    run = []
+                run.append(d)
+                if len(run) == n:
+                    return run
+        return None
+
+    def release(self, lease: Lease):
+        """detach-device: return devices to the pool."""
+        with self._lock:
+            for d in lease.devices:
+                if d.lease_id == lease.lease_id:
+                    d.lease_id = None
+            self._leases.pop(lease.lease_id, None)
+
+    # -- failures ----------------------------------------------------------
+    def mark_failed(self, uids: Sequence[int]):
+        with self._lock:
+            for uid in uids:
+                self._by_uid[uid].healthy = False
+
+    def mark_repaired(self, uids: Sequence[int]):
+        with self._lock:
+            for uid in uids:
+                self._by_uid[uid].healthy = True
+
+    def failed_in_lease(self, lease: Lease) -> List[DeviceInfo]:
+        with self._lock:
+            return [d for d in lease.devices if not d.healthy]

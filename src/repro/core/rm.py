@@ -1,0 +1,177 @@
+"""FlowOS-RM: the disaggregated resource manager (paper §4).
+
+Cooperates with a cluster-RM-shaped execution layer (thread-per-job here,
+Mesos in the paper — the contract is identical: co-allocate, then launch
+tasks on slice members). Scheduling is FIFO (paper Fig. 5) with optional
+backfill; every allocation goes through the DevicePool's contiguity-aware
+placement.
+
+The event log (time, job, phase) is what benchmarks/sharing.py renders into
+the Fig. 5 reproduction.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.job import JobRecord, JobSpec, JobStatus, TaskSpec
+from repro.core.pool import AllocationError, DevicePool
+from repro.core.slice import Slice
+
+
+class FlowOSRM:
+    def __init__(self, pool: DevicePool, backfill: bool = False,
+                 simulate_boot_s: float = 0.0):
+        self.pool = pool
+        self.backfill = backfill
+        self.simulate_boot_s = simulate_boot_s
+        self._lock = threading.RLock()
+        self._job_counter = itertools.count(1)
+        self._queue: List[JobRecord] = []
+        self._jobs: Dict[int, JobRecord] = {}
+        self._threads: Dict[int, threading.Thread] = {}
+        self.events: List[tuple] = []
+        self._t0 = time.perf_counter()
+
+    # -- REST-like API ----------------------------------------------------
+    def submit(self, spec: JobSpec) -> int:
+        with self._lock:
+            rec = JobRecord(job_id=next(self._job_counter), spec=spec,
+                            submit_time=self._now())
+            self._queue.append(rec)
+            self._jobs[rec.job_id] = rec
+            self._log(rec, "submitted")
+            return rec.job_id
+
+    def submit_dict(self, d: dict) -> int:
+        return self.submit(JobSpec.from_dict(d))
+
+    def status(self, job_id: int) -> dict:
+        with self._lock:
+            return self._jobs[job_id].to_dict()
+
+    def cancel(self, job_id: int) -> bool:
+        with self._lock:
+            rec = self._jobs[job_id]
+            if rec.status == JobStatus.QUEUED:
+                self._queue.remove(rec)
+                rec.status = JobStatus.CANCELLED
+                self._log(rec, "cancelled")
+                return True
+            return False
+
+    def pool_utilization(self) -> float:
+        return self.pool.utilization()
+
+    # -- scheduling --------------------------------------------------------
+    def schedule_once(self) -> int:
+        """One FIFO pass; returns number of jobs dispatched."""
+        dispatched = 0
+        with self._lock:
+            pending = list(self._queue)
+        for rec in pending:
+            if self._try_dispatch(rec):
+                dispatched += 1
+            elif not self.backfill:
+                break  # strict FIFO: head-of-line blocks
+        return dispatched
+
+    def _try_dispatch(self, rec: JobRecord) -> bool:
+        with self._lock:
+            if rec.status != JobStatus.QUEUED:
+                return False
+            need = {}
+            for t in rec.spec.tasks:
+                need[t.kind] = need.get(t.kind, 0) + t.n_devices
+            for kind, n in need.items():
+                if not self.pool.can_allocate(n, kind):
+                    return False
+            rec.status = JobStatus.ALLOCATING
+            self._queue.remove(rec)
+            slices = []
+            try:
+                for t in rec.spec.tasks:
+                    s = Slice(name=f"{rec.spec.name}/{t.name}",
+                              pool=self.pool, n_devices=t.n_devices,
+                              mesh_shape=t.mesh_shape,
+                              axis_names=t.axis_names, kind=t.kind)
+                    s.attach_device()
+                    slices.append(s)
+            except AllocationError:
+                for s in slices:
+                    if s.lease is not None:
+                        self.pool.release(s.lease)
+                rec.status = JobStatus.QUEUED
+                self._queue.insert(0, rec)
+                return False
+            rec.slices = slices
+            rec.status = JobStatus.RUNNING
+            rec.start_time = self._now()
+            self._log(rec, "started")
+        th = threading.Thread(target=self._run_job, args=(rec,), daemon=True)
+        with self._lock:
+            self._threads[rec.job_id] = th
+        th.start()
+        return True
+
+    def _run_job(self, rec: JobRecord):
+        try:
+            results = []
+            for t, s in zip(rec.spec.tasks, rec.slices):
+                s.launch_machine(simulate_boot_s=self.simulate_boot_s)
+                self._log(rec, f"{t.name}:launched")
+                s.prepare_task(t.prepare_fn)
+                self._log(rec, f"{t.name}:prepared")
+                results.append(s.launch_task(t.task_fn))
+                self._log(rec, f"{t.name}:finished")
+                s.detach_device()
+                s.destroy_machine()
+            rec.result = results if len(results) > 1 else results[0]
+            rec.status = JobStatus.DONE
+        except BaseException as e:  # noqa: BLE001 — job isolation
+            rec.error = f"{type(e).__name__}: {e}"
+            rec.status = JobStatus.FAILED
+            for s in rec.slices:
+                if s.lease is not None:
+                    self.pool.release(s.lease)
+                    s.lease = None
+        finally:
+            rec.end_time = self._now()
+            self._log(rec, rec.status.value)
+
+    # -- drive to completion -----------------------------------------------
+    def run_until_idle(self, poll_s: float = 0.005, timeout_s: float = 600.0):
+        deadline = time.perf_counter() + timeout_s
+        while time.perf_counter() < deadline:
+            self.schedule_once()
+            with self._lock:
+                busy = bool(self._queue) or any(
+                    r.status in (JobStatus.RUNNING, JobStatus.ALLOCATING)
+                    for r in self._jobs.values())
+            if not busy:
+                return
+            time.sleep(poll_s)
+        raise TimeoutError("jobs did not finish before timeout")
+
+    def wait(self, job_id: int, timeout_s: float = 600.0) -> JobRecord:
+        deadline = time.perf_counter() + timeout_s
+        while time.perf_counter() < deadline:
+            self.schedule_once()
+            rec = self._jobs[job_id]
+            if rec.status in (JobStatus.DONE, JobStatus.FAILED,
+                              JobStatus.CANCELLED):
+                th = self._threads.get(job_id)
+                if th is not None:
+                    th.join(timeout=timeout_s)
+                return rec
+            time.sleep(0.005)
+        raise TimeoutError(f"job {job_id} did not finish")
+
+    # -- internals -----------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _log(self, rec: JobRecord, event: str):
+        self.events.append((self._now(), rec.spec.name, event))

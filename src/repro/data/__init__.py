@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMDataset, make_data_iterator  # noqa: F401

@@ -1,0 +1,111 @@
+"""Flash-decode (split-KV) kernel: one query token against a long KV cache.
+
+The KV sequence is split into blocks; grid (batch, q_head, kv_blocks) with
+the kv axis sequential and (m, l, acc) in VMEM scratch — the kernel twin of
+the split-KV sharding the policy uses for decode shapes. Per-batch cache
+length (kv_len) and sliding windows mask at block granularity, and blocks
+entirely past the valid region are skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, window, softcap, bkv, n_kv):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[b]
+    q_pos = qpos_ref[0]
+    k_start = j * bkv
+    run = k_start < kv_len
+    if window is not None:
+        run = run & (k_start + bkv - 1 >= q_pos - (window - 1))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bkv, D)
+        v = v_ref[0, 0]                              # (bkv, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, bkv)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        if window is not None:
+            s = jnp.where(q_pos - k_pos < window, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (1, D)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k, v, kv_len, q_pos, *,
+                         window: Optional[int] = None,
+                         softcap: Optional[float] = None,
+                         scale: Optional[float] = None,
+                         bkv: int = 512, interpret: bool = True):
+    """q: (B, Hq, 1, D); k, v: (B, Hkv, T, D); kv_len: (B,) int32;
+    q_pos: (1,) int32. Returns (B, Hq, 1, D)."""
+    B, Hq, _, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bkv = min(bkv, T)
+    assert T % bkv == 0
+    n_kv = T // bkv
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, bkv=bkv, n_kv=n_kv)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # kv_len
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # q_pos
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q_pos, q, k, v)

@@ -1,0 +1,123 @@
+"""Flash attention (FA2-style) forward kernel for TPU.
+
+Tiling: grid (batch, q_heads, q_blocks, kv_blocks); the kv dimension is the
+sequential minor axis with (m, l, acc) carried in VMEM scratch. GQA is
+handled in the K/V index maps (kv head = q head // group); causal and
+sliding-window masking are additive, and fully-masked kv blocks are skipped
+with ``pl.when`` (block-index arithmetic, no wasted MXU issue).
+
+Block sizes default to (bq, bkv) = (256, 512) with D padded to 128 lanes by
+the caller — MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], bq: int, bkv: int, n_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = i * bq
+    k_start = j * bkv
+    run = jnp.bool_(True)
+    if causal:
+        run = run & (k_start <= q_start + bq - 1)
+    if window is not None:
+        run = run & (k_start + bkv - 1 >= q_start - (window - 1))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bkv, D)
+        v = v_ref[0, 0]                      # (bkv, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        if causal:
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        if window is not None:
+            s = jnp.where(q_pos - k_pos < window, s, NEG_INF)
+
+        m_prev = m_ref[...][:, 0]
+        l_prev = l_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new[:, None]
+        l_ref[...] = l_new[:, None]
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = l_ref[...][:, 0]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None,
+                        bq: int = 256, bkv: int = 512,
+                        interpret: bool = True):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Returns (B, Hq, Sq, D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq = min(bq, Sq)
+    bkv = min(bkv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    nq, n_kv = Sq // bq, Skv // bkv
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bkv=bkv, n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bkv, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),   # m
+            _vmem((bq, 1), jnp.float32),   # l
+            _vmem((bq, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,92 @@
+"""Public jitted wrappers around the Pallas kernels.
+
+Model code uses the (B, S, H, D) activation layout; kernels use
+(B, H, S, D). Wrappers transpose, pad the head dim to the 128-lane MXU
+boundary when needed, and choose interpret mode automatically (True off-TPU
+so the same code runs in CI)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import moe_ffn as _moe
+from repro.kernels import rmsnorm as _rms
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_head(x, to: int = 128):
+    d = x.shape[-1]
+    if d % to == 0:
+        return x, d
+    pad = to - d % to
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)]), d
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) — model layout."""
+    import math
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qt, d0 = _pad_head(qt)
+    kt, _ = _pad_head(kt)
+    vt, _ = _pad_head(vt)
+    out = _fa.flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                                  softcap=softcap, scale=scale,
+                                  interpret=_interpret())
+    return out[..., :d0].transpose(0, 2, 1, 3)
+
+
+def decode_attention(q, k, v, *, kv_len, q_pos,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None):
+    """q: (B, 1, Hq, D); k, v: (B, T, Hkv, D); kv_len: (B,); q_pos: (1,)."""
+    import math
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    qt, d0 = _pad_head(qt)
+    kt, _ = _pad_head(kt)
+    vt, _ = _pad_head(vt)
+    out = _dec.decode_attention_fwd(
+        qt, kt, vt, kv_len.astype(jnp.int32), q_pos.astype(jnp.int32),
+        window=window, softcap=softcap, scale=scale,
+        interpret=_interpret())
+    return out[..., :d0].transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    """Model layout: x (B, S, H, P); dt (B, S, H); Bm/Cm (B, S, G, N).
+    Returns (y (B, S, H, P), state (B, H, N, P))."""
+    xt = x.transpose(0, 2, 1, 3)
+    dtt = dt.transpose(0, 2, 1)
+    Bt = Bm.transpose(0, 2, 1, 3)
+    Ct = Cm.transpose(0, 2, 1, 3)
+    y, state = _ssd.ssd_scan_fwd(xt, dtt, A, Bt, Ct, chunk=chunk,
+                                 interpret=_interpret())
+    return y.transpose(0, 2, 1, 3), state
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6):
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    out = _rms.rmsnorm_fwd(flat, w, eps=eps, interpret=_interpret())
+    return out.reshape(shape)
+
+
+def moe_ffn(x, wg, wu, wd):
+    """x: (E, C, d); weights per expert. Fused expert FFN."""
+    return _moe.moe_ffn_fwd(x, wg, wu, wd, interpret=_interpret())

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every kernel (the correctness ground truth the
+interpret-mode sweeps assert against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  scale: Optional[float] = None,
+                  kv_len=None, q_pos=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Naive full-score oracle."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kk = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kk) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = (jnp.arange(Sq) if q_pos is None
+          else jnp.broadcast_to(q_pos, (Sq,)))
+    kp = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    if kv_len is not None:
+        tail = kp[None, :] < kv_len[:, None]
+        s = jnp.where(tail[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """Sequential SSD oracle. x: (B, H, S, P); dt: (B, H, S); A: (H,);
+    Bm/Cm: (B, G, S, N). Returns (y (B,H,S,P), state (B,H,N,P))."""
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)  # (B,H,S,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, t):
+        decay = jnp.exp(dtf[:, :, t] * A)[..., None, None]
+        h = h * decay + (dtf[:, :, t, None] * Bh[:, :, t])[..., None] \
+            * xf[:, :, t, None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", Ch[:, :, t], h)
+        return h, y
+
+    h = jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0
+    ys = []
+    for t in range(S):
+        h, y = step(h, t)
+        ys.append(y)
+    return jnp.stack(ys, axis=2).astype(x.dtype), h
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def moe_ffn_ref(x, wg, wu, wd):
+    dt = x.dtype
+    g = jnp.einsum("ecd,edf->ecf", x, wg.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", x, wu.astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
+    return jnp.einsum("ecf,efd->ecd", h.astype(dt), wd.astype(dt))

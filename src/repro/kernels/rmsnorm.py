@@ -1,0 +1,39 @@
+"""Fused RMSNorm kernel: one HBM pass (read x, write y) per row block
+instead of the unfused mean-square / rsqrt / scale chain."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)       # (br, D)
+    w = w_ref[...].astype(jnp.float32)       # (D,)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+                interpret: bool = True):
+    """x: (R, D); w: (D,). Returns (R, D)."""
+    R, D = x.shape
+    br = min(block_rows, R)
+    while R % br != 0:
+        br //= 2
+    br = max(br, 1)
+    kernel = functools.partial(_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=interpret,
+    )(x, w)

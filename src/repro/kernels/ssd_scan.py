@@ -1,0 +1,104 @@
+"""Mamba-2 SSD chunked-scan kernel.
+
+Grid (batch, head, chunks); the chunk axis is sequential with the (N, P)
+state carried in VMEM scratch. Each step does the quadratic intra-chunk
+block on the MXU (C B^T with decay mask) plus the rank-1 state
+injection/readout — the TPU-native shape of the state-space duality: big
+matmuls inside chunks, O(N*P) recurrence between them.
+
+Layouts: x (B, H, S, P); dt (B, H, S); A (H,); Bm/Cm (B, G, S, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)    # (L,)
+    A = a_ref[0]                             # ()
+    Bm = b_ref[0, 0].astype(jnp.float32)     # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)     # (L, N)
+
+    a = dt * A                               # (L,) negative
+    cum = jnp.cumsum(a)
+    seg_end = cum[-1]
+
+    # intra-chunk quadratic block
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = cum[:, None] - cum[None, :]
+    decay = jnp.exp(jnp.where(li >= mi, seg, -jnp.inf))
+    M = CB * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, P)
+
+    # inter-chunk: readout of the carried state
+    state = state_ref[...]                   # (N, P)
+    y = y + jax.lax.dot_general(Cm * jnp.exp(cum)[:, None], state,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: state = state * exp(seg_end) + sum_m w_m B_m x_m^T
+    w = jnp.exp(seg_end - cum) * dt          # (L,)
+    inject = jax.lax.dot_general(Bm * w[:, None], x,
+                                 (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (N,P)
+    state_ref[...] = state * jnp.exp(seg_end) + inject
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_scan_fwd(x, dt, A, Bm, Cm, *, chunk: int = 128,
+                 interpret: bool = True):
+    """x: (B, H, S, P); dt: (B, H, S); A: (H,); Bm/Cm: (B, G, S, N).
+    Returns (y (B, H, S, P), final state (B, H, N, P))."""
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    rep = H // G
+    assert S % chunk == 0
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c: (b, h // rep, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N),
+                         lambda b, h, c: (b, h // rep, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,191 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Sources:
+  * ``compiled.cost_analysis()`` -> HLO FLOPs and bytes accessed (per-device,
+    post-SPMD-partitioning).
+  * ``compiled.as_text()`` -> collective bytes: sum of output operand sizes
+    of all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute ops (per-device program).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. Terms are seconds-per-step *per chip*; the dominant term
+is the roofline bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (we charge 1 link per hop)
+DCN_BW = 6.25e9          # bytes/s per chip cross-pod (50 Gb/s NIC-class)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in an HLO shape string
+    (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind output bytes in a (per-device) HLO module.
+
+    Start/done pairs (async collectives) are counted once via the -start op;
+    plain (sync) ops are counted directly.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        lhs, rhs = line.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"^(\([^)]*\)|[\w\[\],]+)\s+([\w-]+)", rhs)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in _COLLECTIVES:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        out[base] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device (bytes accessed)
+    coll_bytes: Dict[str, int]  # per device, by kind
+    cross_pod: bool
+    model_flops: float          # 6*N*D (or 6*N_active*D) global
+    peak_memory: Optional[int] = None  # per device
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    dcn_bytes: float = 0.0  # pod-spanning subset of collective bytes
+
+    @property
+    def collective_s(self) -> float:
+        total = sum(self.coll_bytes.values())
+        if not self.cross_pod:
+            return total / ICI_BW
+        ici = max(total - self.dcn_bytes, 0.0)
+        return ici / ICI_BW + self.dcn_bytes / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step estimate: max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs * n_devices) — remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.n_devices
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step estimate."""
+        if self.step_time_s == 0:
+            return 0.0
+        return (self.model_flops
+                / (self.n_devices * PEAK_FLOPS * self.step_time_s))
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "dcn_bytes_per_dev": self.dcn_bytes,
+            "cross_pod": self.cross_pod,
+            "model_flops": self.model_flops,
+            "peak_memory_per_dev": self.peak_memory,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D for training (D = tokens), 2*N*D for inference
+    fwd; decode D = global_batch tokens per step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence per step
+    return 2.0 * n * tokens
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["peak_bytes"] = (out.get("argument_size_in_bytes", 0)
+                             + out.get("temp_size_in_bytes", 0)
+                             + out.get("output_size_in_bytes", 0)
+                             - out.get("alias_size_in_bytes", 0))
+    return out

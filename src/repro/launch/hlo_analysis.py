@@ -1,0 +1,528 @@
+"""Loop-aware cost analysis over optimized (post-SPMD) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+regardless of trip count — so with scan-over-layers every per-layer FLOP,
+byte and collective is under-counted by ~n_layers. This module re-derives
+the three roofline terms by walking the HLO computation graph:
+
+  * dot FLOPs from output shape x contraction size (2*M*N*K), elementwise /
+    reduce FLOPs at 1/elem;
+  * HBM bytes at *fusion boundaries* (operands + outputs of fusions and
+    unfused ops — fusion internals stay on-chip, which models TPU better
+    than the CPU backend's estimate);
+  * collective wire bytes with ring-model factors (all-reduce 2x,
+    all-gather/reduce-scatter ~1x of payload);
+  * ``while`` bodies multiplied by trip counts (authoritative
+    ``known_trip_count`` backend_config, else the loop-condition constant);
+    nested loops multiply recursively. ``conditional`` takes the max branch.
+
+All numbers are per-device (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "select", "compare", "and", "or", "not", "xor", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "remainder",
+    "atan2", "logistic", "cbrt", "erf", "exponential-minus-one",
+    "log-plus-one", "sine", "cosine", "tan", "clamp",
+}
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "opt-barrier",
+}
+
+Shape = Tuple[str, List[int]]
+
+
+def _shapes_in(text: str) -> List[Shape]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x] if dims else []
+        out.append((dtype, d))
+    return out
+
+
+def _bytes_of(shapes: List[Shape]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of(shapes: List[Shape]) -> int:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_shapes: List[Shape]
+    operands: List[str]
+    attrs: str
+    raw: str
+    operand_shapes: List[Shape] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Optional[Dict[str, float]] = None
+    dcn_bytes: float = 0.0  # subset of collective bytes crossing pods
+
+    def __post_init__(self):
+        if self.coll_bytes is None:
+            self.coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+
+    def __iadd__(self, other: "Costs"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.dcn_bytes += other.dcn_bytes
+        for k in _COLLECTIVES:
+            self.coll_bytes[k] += other.coll_bytes[k]
+        return self
+
+    def scaled(self, factor: float) -> "Costs":
+        return Costs(self.flops * factor, self.bytes * factor,
+                     {k: v * factor for k, v in self.coll_bytes.items()},
+                     self.dcn_bytes * factor)
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _split_instr(line: str):
+    """'name = <shape> <op>(args), attrs' -> (name, shape, op, args, attrs).
+
+    Tuple shapes may contain /*index=N*/ comments (with '=' inside), so this
+    uses balanced-paren scanning, not a regex over the whole line."""
+    stripped = line.strip()
+    if stripped.startswith("ROOT "):
+        stripped = stripped[5:]
+    name, sep, rest = stripped.partition(" = ")
+    if not sep or not name.startswith("%") and not re.match(r"[\w.\-]+$",
+                                                            name):
+        if not sep:
+            return None
+    name = name.lstrip("%")
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_part = rest[:end + 1]
+        rest2 = rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_part = rest[:sp]
+        rest2 = rest[sp + 1:].strip()
+    m = _OP_RE.match(rest2)
+    if not m:
+        return None
+    op = m.group(1)
+    body = rest2[m.end():]
+    depth, idx = 1, len(body)
+    for i, ch in enumerate(body):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                idx = i
+                break
+    args, attrs = body[:idx], body[idx + 1:]
+    return name, shape_part, op, args, attrs
+_ATTR_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations={([^}]*)}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims={([\d,]*)}")
+_TRIP_RE = re.compile(r'"known_trip_count":{"n":"(\d+)"}')
+
+
+def parse_hlo(text: str):
+    """Returns (computations: name -> [Instr], entry_name)."""
+    comps: Dict[str, List[Instr]] = {}
+    symbols: Dict[str, Dict[str, Instr]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if "->" in stripped and stripped.endswith("{"):
+                m = _COMP_HEADER.match(stripped)
+                if m:
+                    cur = m.group(2)
+                    if m.group(1):
+                        entry = cur
+                    comps[cur] = []
+                    symbols[cur] = {}
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        parts = _split_instr(line)
+        if parts is None:
+            continue
+        name, shape_part, op, args, attrs = parts
+        ins = Instr(name=name, op=op, out_shapes=_shapes_in(shape_part),
+                    operands=_OPERAND_RE.findall(args), attrs=attrs,
+                    raw=line)
+        comps[cur].append(ins)
+        symbols[cur][name] = ins
+    # resolve operand shapes within each computation
+    for cname, instrs in comps.items():
+        table = symbols[cname]
+        for ins in instrs:
+            shapes: List[Shape] = []
+            for oname in ins.operands:
+                ref = table.get(oname)
+                if ref is not None:
+                    shapes.extend(ref.out_shapes)
+            ins.operand_shapes = shapes
+    return comps, entry
+
+
+def _trip_count(ins: Instr, comps) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return int(m.group(1))
+    m = _ATTR_COND.search(ins.attrs)
+    if m:
+        consts = []
+        for ci in comps.get(m.group(1), []):
+            cm = re.search(r"constant\((-?\d+)\)", ci.raw)
+            if cm:
+                consts.append(int(cm.group(1)))
+        pos = [c for c in consts if c > 0]
+        if pos:
+            return max(pos)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# cost evaluation
+# ---------------------------------------------------------------------------
+
+def _dot_flops(ins: Instr) -> float:
+    out_elems = _elems_of(ins.out_shapes)
+    m = _CONTRACT_RE.search(ins.attrs)
+    k = 1
+    if m and ins.operand_shapes:
+        lhs_dims = ins.operand_shapes[0][1]
+        for di in (int(x) for x in m.group(1).split(",") if x):
+            if di < len(lhs_dims):
+                k *= lhs_dims[di]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: Instr) -> float:
+    out_elems = _elems_of(ins.out_shapes)
+    m = re.search(r"window={size=([\dx]+)", ins.attrs)
+    k = 1
+    if m:
+        for x in m.group(1).split("x"):
+            k *= int(x)
+    return 2.0 * out_elems * k  # depthwise assumption
+
+
+_IOTA_RG = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_EXPLICIT_RG = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _crosses_pods(attrs: str, pod_size: int = 256) -> bool:
+    """True when a collective's replica group mixes device ids from
+    different pods (id // pod_size differs) — those payloads ride the DCN.
+    Handles both explicit and iota-format replica groups."""
+    m = _EXPLICIT_RG.search(attrs)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        return len({i // pod_size for i in ids}) > 1
+    m = _IOTA_RG.search(attrs)
+    if m:
+        import numpy as np
+        a, b = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",") if x]
+        n = 1
+        for d in dims:
+            n *= d
+        ids = np.arange(n).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",") if x]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(a, b)
+        pods = groups // pod_size
+        return bool((pods != pods[:, :1]).any())
+    return False
+
+
+def _collective_wire_bytes(ins: Instr, base: str) -> float:
+    out_b = _bytes_of(ins.out_shapes)
+    in_b = _bytes_of(ins.operand_shapes)
+    if base == "all-reduce":
+        return 2.0 * out_b
+    if base == "all-gather":
+        return float(out_b)
+    if base == "reduce-scatter":
+        return float(in_b)
+    if base == "all-to-all":
+        return float(out_b)
+    if base == "collective-permute":
+        return float(out_b)
+    return 0.0
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: Dict[str, Costs] = {}
+
+    def total(self) -> Costs:
+        if not self.entry:
+            raise ValueError("no ENTRY computation found")
+        return self._comp_cost(self.entry)
+
+    # ------------------------------------------------------------------
+    def _comp_cost(self, name: str) -> Costs:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Costs()  # cycle guard
+        total = Costs()
+        table = {ci.name: ci for ci in self.comps.get(name, [])}
+        for ins in self.comps.get(name, []):
+            total += self._instr_cost(ins, table)
+        self._memo[name] = total
+        return total
+
+    def _bf16_promoted(self, ins: Instr, table) -> bool:
+        """True when a collective's f32 payload is a promoted bf16 value
+        (XLA CPU promotes bf16 collectives; TPU runs them natively at
+        bf16 — count wire bytes at the source dtype)."""
+        if not ins.out_shapes or ins.out_shapes[0][0] != "f32":
+            return False
+        for oname in ins.operands:
+            prod = table.get(oname)
+            if prod is None:
+                continue
+            if prod.op == "convert" or (prod.op == "fusion"
+                                        and "convert" in prod.name):
+                if any(dt == "bf16" for dt, _ in prod.operand_shapes):
+                    return True
+        return False
+
+    def _instr_cost(self, ins: Instr, table=None) -> Costs:
+        table = table or {}
+        op = ins.op
+        c = Costs()
+        base = op
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                return c
+            wire = _collective_wire_bytes(ins, base)
+            if self._bf16_promoted(ins, table):
+                wire *= 0.5
+            c.coll_bytes[base] += wire
+            if _crosses_pods(ins.attrs):
+                c.dcn_bytes += wire
+            c.bytes += _bytes_of(ins.out_shapes)
+            return c
+
+        if op == "while":
+            trips = _trip_count(ins, self.comps)
+            inner = Costs()
+            m = _ATTR_CALLS.search(ins.attrs)
+            if m:
+                inner += self._comp_cost(m.group(1))
+            m = _ATTR_COND.search(ins.attrs)
+            if m:
+                inner += self._comp_cost(m.group(1))
+            return inner.scaled(trips)
+
+        if op == "conditional":
+            m = _ATTR_BRANCHES.search(ins.attrs)
+            branches = ([b.strip().lstrip("%") for b in m.group(1).split(",")]
+                        if m else [])
+            best = Costs()
+            for b in branches:
+                bc = self._comp_cost(b)
+                if bc.flops >= best.flops:
+                    best = bc
+            return best
+
+        if op in ("fusion", "call", "async-start"):
+            m = _ATTR_CALLS.search(ins.attrs)
+            callee = m.group(1) if m else None
+            inner = self._comp_cost(callee) if callee else Costs()
+            c.bytes += (self._fusion_operand_bytes(ins, callee)
+                        + self._fusion_output_bytes(ins, callee))
+            c.flops += inner.flops
+            for k in _COLLECTIVES:
+                c.coll_bytes[k] += inner.coll_bytes[k]
+            return c
+
+        if op in _NO_TRAFFIC:
+            return c
+
+        if op == "dot":
+            c.flops += _dot_flops(ins)
+            c.bytes += _bytes_of(ins.operand_shapes) + _bytes_of(ins.out_shapes)
+            return c
+
+        if op == "convolution":
+            c.flops += _conv_flops(ins)
+            c.bytes += _bytes_of(ins.operand_shapes) + _bytes_of(ins.out_shapes)
+            return c
+
+        if op in ("reduce", "reduce-window"):
+            c.flops += _elems_of(ins.operand_shapes)
+            c.bytes += _bytes_of(ins.operand_shapes) + _bytes_of(ins.out_shapes)
+            return c
+
+        if op in _ELEMWISE:
+            c.flops += _elems_of(ins.out_shapes)
+            c.bytes += _bytes_of(ins.operand_shapes) + _bytes_of(ins.out_shapes)
+            return c
+
+        # slicing / in-place ops: charge the *moved region*, not the full
+        # buffer (XLA aliases the buffer; only the slice crosses HBM)
+        if op in ("dynamic-slice", "slice", "gather"):
+            c.bytes += 2 * _bytes_of(ins.out_shapes)
+            return c
+        if op == "dynamic-update-slice":
+            upd = (ins.operand_shapes[1:2] if len(ins.operand_shapes) > 1
+                   else ins.out_shapes)
+            c.bytes += 2 * _bytes_of(upd)
+            return c
+        if op == "scatter":
+            upd = (ins.operand_shapes[2:3] if len(ins.operand_shapes) > 2
+                   else ins.out_shapes)
+            c.bytes += 2 * _bytes_of(upd)
+            return c
+        if op == "broadcast":
+            c.bytes += _bytes_of(ins.out_shapes)
+            return c
+
+        # data movement (copy, transpose, reshape, pad, concatenate,
+        # sort, rng, custom-call, ...)
+        c.bytes += _bytes_of(ins.operand_shapes) + _bytes_of(ins.out_shapes)
+        return c
+
+    # ------------------------------------------------------------------
+    # fusion-boundary traffic with slice-awareness: an operand consumed
+    # ONLY by dynamic-slice/gather inside the fusion contributes the slice
+    # bytes; a root that is a dynamic-update-slice contributes the update
+    # bytes (the buffer itself is aliased in place).
+    # ------------------------------------------------------------------
+    def _callee_params(self, callee: str):
+        params = {}
+        uses: Dict[str, list] = {}
+        for ci in self.comps.get(callee, []):
+            if ci.op == "parameter":
+                pm = re.search(r"parameter\((\d+)\)", ci.raw)
+                if pm:
+                    params[int(pm.group(1))] = ci
+            for oname in ci.operands:
+                uses.setdefault(oname, []).append(ci)
+        return params, uses
+
+    def _fusion_operand_bytes(self, ins: Instr, callee) -> float:
+        if not callee or callee not in self.comps:
+            return float(_bytes_of(ins.operand_shapes))
+        params, uses = self._callee_params(callee)
+        total = 0.0
+        for idx, _ in enumerate(ins.operands):
+            p = params.get(idx)
+            if p is None:
+                continue
+            consumers = uses.get(p.name, [])
+            full = _bytes_of(p.out_shapes)
+            if consumers and all(cns.op in ("dynamic-slice", "gather")
+                                 for cns in consumers):
+                total += min(full, sum(_bytes_of(cns.out_shapes)
+                                       for cns in consumers))
+            else:
+                total += full
+        return total
+
+    def _fusion_output_bytes(self, ins: Instr, callee) -> float:
+        full = float(_bytes_of(ins.out_shapes))
+        if not callee or callee not in self.comps:
+            return full
+        instrs = self.comps[callee]
+        by_name = {ci.name: ci for ci in instrs}
+        root = instrs[-1] if instrs else None
+        if root is None:
+            return full
+        producers = [root]
+        if root.op == "tuple":
+            producers = [by_name[o] for o in root.operands if o in by_name]
+        total = 0.0
+        for pr in producers:
+            if pr.op == "dynamic-update-slice":
+                upd = (pr.operand_shapes[1:2]
+                       if len(pr.operand_shapes) > 1 else pr.out_shapes)
+                total += _bytes_of(upd)
+            else:
+                total += _bytes_of(pr.out_shapes)
+        return min(total, full) if total else full
+
+
+def analyze(text: str) -> Costs:
+    return HloCostModel(text).total()

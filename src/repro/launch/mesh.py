@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — FlowOS-RM builds meshes only when a slice is
+launched.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model) — the `pod` axis is
+    the slow DCN-class dimension (paper: the disaggregated network)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_from_lease(lease, mesh_shape: Tuple[int, ...],
+                    axis_names: Tuple[str, ...]):
+    """Build a mesh over a FlowOS-RM lease's devices."""
+    devs = np.array(lease.jax_devices()).reshape(mesh_shape)
+    return jax.sharding.Mesh(devs, axis_names)
+
+
+def single_device_mesh():
+    """1x1 mesh on the local device (smoke tests / examples on CPU)."""
+    arr = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(arr, ("data", "model"))

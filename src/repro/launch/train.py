@@ -1,0 +1,167 @@
+"""End-to-end training driver through FlowOS-RM.
+
+This is example (b)'s engine and the integration point for every subsystem:
+the RM constructs a slice, the policy shards the model onto it, the data
+pipeline feeds it, checkpoints flow async, and the elastic controller
+watches for failures/stragglers at step boundaries.
+
+Usage (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.elastic import ElasticController
+from repro.core.pool import DevicePool
+from repro.core.rm import FlowOSRM
+from repro.core.job import JobSpec, TaskSpec
+from repro.data.pipeline import SyntheticLMDataset, make_data_iterator
+from repro.models.config import ShapeConfig
+from repro.models.registry import get_model, get_config
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_schedule
+from repro.parallel.policy import sharding_policy
+from repro.parallel.sharding import sanitize_tree_specs, tree_specs
+from repro.train import steps as S
+
+
+def load_config(arch: str, smoke: bool):
+    if smoke:
+        mod_name = arch.replace(".", "_").replace("-", "_")
+        mod = importlib.import_module(f"repro.configs.{mod_name}")
+        return mod.smoke()
+    return get_config(arch)
+
+
+def run_training(cfg, *, steps: int, batch: int, seq: int,
+                 mesh_shape=(1, 1), pool: Optional[DevicePool] = None,
+                 ckpt_dir: Optional[str] = None, resume: bool = False,
+                 lr: float = 3e-4, log_every: int = 10,
+                 elastic: Optional[ElasticController] = None,
+                 seed: int = 0):
+    """Train on the given slice mesh; returns (final metrics, losses)."""
+    model = get_model(cfg)
+    shape = ShapeConfig("custom", seq, batch, "train")
+
+    if pool is None:
+        pool = DevicePool.from_jax_devices(jax.devices()[: int(np.prod(mesh_shape))],
+                                           devices_per_node=1)
+    rm = FlowOSRM(pool)
+    losses = []
+    result = {}
+
+    def prepare(slice_):
+        mesh = slice_.mesh
+        rules = sharding_policy(cfg, shape, mesh)
+        optimizer = AdamW(lr=lr, schedule=cosine_schedule(lr, 10, steps))
+        step_fn = S.make_train_step(model, optimizer, rules)
+        p_specs, opt_specs = S.state_specs(model, rules)
+        p_struct = S.params_struct(model)
+        p_specs = sanitize_tree_specs(mesh, p_specs, p_struct)
+        from jax.sharding import NamedSharding
+        from repro.optim.adamw import OptState
+        from jax.sharding import PartitionSpec as P
+        opt_specs = OptState(step=P(), mu=p_specs, nu=p_specs)
+        as_shard = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        state_sharding = S.TrainState(as_shard(p_specs), as_shard(opt_specs))
+        jitted = jax.jit(step_fn, in_shardings=(state_sharding, None),
+                         donate_argnums=(0,))
+        return {"jitted": jitted, "rules": rules,
+                "state_sharding": state_sharding, "optimizer": optimizer}
+
+    def task(slice_):
+        exe = slice_.executable
+        mesh = slice_.mesh
+        ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        start_step = 0
+        with mesh:
+            if resume and ckpt and ckpt.latest_step() is not None:
+                state = ckpt.restore(
+                    shardings=jax.tree.map(lambda s: s,
+                                           exe["state_sharding"]))
+                start_step = ckpt.latest_step()
+            else:
+                params = model.init(cfg, jax.random.PRNGKey(seed))
+                opt = exe["optimizer"].init(params)
+                state = S.TrainState(params, opt)
+
+            ds = SyntheticLMDataset(cfg, seq, batch, seed=seed)
+            it = make_data_iterator(ds, start_step=start_step,
+                                    stop_step=steps)
+            t_start = time.perf_counter()
+            for step_i, data in it:
+                t0 = time.perf_counter()
+                state, metrics = exe["jitted"](state, data)
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                dt = time.perf_counter() - t0
+                if elastic is not None:
+                    elastic.record_step({n: dt for n in
+                                         slice_.lease.nodes})
+                if step_i % log_every == 0 or step_i == steps - 1:
+                    print(f"  step {step_i}: loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)")
+                if ckpt and (step_i + 1) % 50 == 0:
+                    ckpt.save(step_i + 1, state)
+            if ckpt:
+                ckpt.save(steps, state, blocking=True)
+            result["steps_per_s"] = (len(losses)
+                                     / (time.perf_counter() - t_start))
+            result["final_loss"] = losses[-1] if losses else None
+        return result
+
+    n_dev = int(np.prod(mesh_shape))
+    spec = JobSpec(name=f"train-{cfg.name}", tasks=[TaskSpec(
+        name="train", n_devices=n_dev, mesh_shape=tuple(mesh_shape),
+        axis_names=("data", "model"), arch=cfg.name, steps=steps,
+        prepare_fn=prepare, task_fn=task)])
+    job_id = rm.submit(spec)
+    rec = rm.wait(job_id, timeout_s=3600)
+    if rec.error:
+        raise RuntimeError(rec.error)
+    breakdown = rec.slices[0].breakdown() if rec.slices else {}
+    return {**result, "losses": losses, "breakdown": breakdown,
+            "job": rec.to_dict()}
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true",
+                   help="use the reduced config (CPU-friendly)")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--ckpt-dir", type=str, default=None)
+    p.add_argument("--resume", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = load_config(args.arch, args.smoke)
+    out = run_training(cfg, steps=args.steps, batch=args.batch,
+                       seq=args.seq, lr=args.lr, ckpt_dir=args.ckpt_dir,
+                       resume=args.resume, seed=args.seed)
+    b = out["breakdown"]
+    total = sum(b.values())
+    print(f"[train] {cfg.name}: final loss {out['final_loss']:.4f}, "
+          f"{out['steps_per_s']:.2f} steps/s")
+    print(f"[train] lifecycle: " + ", ".join(
+        f"{k}={v:.2f}s" for k, v in b.items()))
+    print(f"[train] construction+destruction overhead: "
+          f"{(total - b.get('run_task', 0)) / max(total, 1e-9):.1%}")
+
+
+if __name__ == "__main__":
+    main()

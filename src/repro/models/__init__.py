@@ -1,0 +1,2 @@
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+from repro.models.registry import get_model, get_config, list_architectures  # noqa: F401

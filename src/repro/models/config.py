@@ -1,0 +1,180 @@
+"""Model configuration for the architecture zoo.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The config is
+a frozen dataclass so it can be used as a static argument to ``jax.jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3: global layers use 1M
+    rope_kind: str = "standard"  # standard | mrope | none | learned
+    mrope_sections: Tuple[int, ...] = ()  # qwen2-vl: freq-dim split (t,h,w)
+    sliding_window: Optional[int] = None
+    global_every: Optional[int] = None  # every Nth layer is global (gemma3: 6)
+    logit_softcap: Optional[float] = None
+
+    # --- mlp ---
+    act: str = "silu"  # silu | gelu | relu2
+
+    # --- moe ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- ssm (mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    ssm_n_groups: int = 1
+
+    # --- hybrid (zamba2) ---
+    attn_every: int = 0  # shared attention block after every k-th ssm layer
+
+    # --- encoder-decoder (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0  # fixed encoder frame count (whisper: 1500)
+
+    # --- vlm ---
+    n_vision_patches: int = 0  # stub patch-embedding count folded into seq
+
+    # --- norm / embeddings ---
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    embed_scale: bool = False  # gemma-style sqrt(d_model) embedding scale
+
+    # --- numerics / implementation ---
+    dtype: str = "bfloat16"
+    remat: str = "none"  # none | dots | full
+    use_pallas: bool = False  # pallas kernels (TPU); jnp path used for dry-run
+    attn_stub: bool = False  # perf analysis: elide the attention core so
+    # the kernel-substitution tool can measure non-attention traffic
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.family == "hybrid"
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if the arch supports long-context (500k) decode per spec:
+        SSM / hybrid / sliding-window-local attention families."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    @property
+    def has_decoder(self) -> bool:
+        """Encoder-only archs have no decode step (all assigned archs decode)."""
+        return True
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count (embedding + layers), for roofline's
+        MODEL_FLOPS = 6*N*D."""
+        d, hd = self.d_model, self.head_dim
+        n = 0
+        n += self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        if self.family in ("ssm", "hybrid"):
+            di, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            g = self.ssm_n_groups
+            proj_in = d * (2 * di + 2 * g * ds + nh)
+            conv = (di + 2 * g * ds) * self.ssm_conv_width
+            proj_out = di * d
+            per_layer = proj_in + conv + proj_out + 2 * nh + di + d
+            n += self.n_layers * per_layer
+            if self.is_hybrid and self.attn_every:
+                # one shared attention+mlp block
+                n += (2 * d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                      + 3 * d * self.d_ff + 2 * d)
+            return n
+        attn = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d)
+        if self.is_moe:
+            ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+        else:
+            ffn = 3 * d * self.d_ff if self.act != "relu2" else 2 * d * self.d_ff
+        per_layer = attn + ffn + 2 * d
+        n += self.n_layers * per_layer
+        if self.is_encdec:
+            # encoder layers + decoder cross-attention
+            enc = self.n_encoder_layers * (attn + ffn + 2 * d)
+            cross = self.n_layers * (attn + d)
+            n += enc + cross
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.n_layers * self.n_experts * 3 * d * self.moe_d_ff
+        active_ffn = self.n_layers * self.top_k * 3 * d * self.moe_d_ff
+        return dense + active_ffn
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,162 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* attention+MLP block
+applied after every ``attn_every``-th SSM layer (true weight sharing — one
+parameter set, nine invocations for the 54-layer config, each with its own
+KV history).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+def _n_shared_calls(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    k_embed, k_layers, k_shared, k_mlp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: mamba2.init_block(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embed(k_embed, cfg),
+        "layers": stacked,
+        "shared": {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(k_shared, cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model),
+            "mlp": L.init_mlp(k_mlp, cfg),
+        },
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    stack = jax.tree.map(lambda axes: (None,) + axes, mamba2.block_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embed_axes(cfg),
+        "layers": stack,
+        "shared": {
+            "ln1": L.rmsnorm_axes(),
+            "attn": L.attention_axes(cfg),
+            "ln2": L.rmsnorm_axes(),
+            "mlp": L.mlp_axes(cfg),
+        },
+        "final_norm": L.rmsnorm_axes(),
+    }
+
+
+def _shared_block(cfg: ModelConfig, shared, x, angles):
+    a_in = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+    x = x + L.attention(shared["attn"], cfg, a_in, angles=angles, causal=True)
+    m_in = L.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp(shared["mlp"], cfg, m_in)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def apply_hidden(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+    x = shard(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    angles = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+    k = cfg.attn_every
+    n_seg = _n_shared_calls(cfg)
+    seg_params = jax.tree.map(
+        lambda a: a[: n_seg * k].reshape((n_seg, k) + a.shape[1:]),
+        params["layers"])
+    shared = params["shared"]
+
+    mamba_blk = mamba2._remat(
+        cfg, lambda pp, xx: mamba2.block_apply(pp, cfg, xx))
+
+    def seg_body(x, p_seg):
+        def inner(x, p):
+            return x + mamba_blk(p, x), None
+        x, _ = jax.lax.scan(inner, x, p_seg)
+        x = _shared_block(cfg, shared, x, angles)
+        return x, None
+
+    x, _ = jax.lax.scan(seg_body, x, seg_params)
+    # tail SSM layers (if n_layers % attn_every != 0)
+    for li in range(n_seg * k, cfg.n_layers):
+        p = jax.tree.map(lambda a: a[li], params["layers"])
+        x = x + mamba_blk(p, x)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def apply(cfg: ModelConfig, params, batch):
+    x, aux = apply_hidden(cfg, params, batch)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    ssm = mamba2.init_cache(cfg, batch, max_len, dtype)
+    n_calls = _n_shared_calls(cfg)
+    attn = L.init_kv_cache(cfg, batch, max_len, n_calls, dtype)
+    return {"ssm": ssm, "attn": attn}
+
+
+def cache_axes(cfg: ModelConfig):
+    return {"ssm": mamba2.cache_axes(cfg), "attn": L.kv_cache_axes()}
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], cfg, tokens)
+    idx = cache["attn"]["len"][0, 0]
+    pos = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    angles = L.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+
+    k = cfg.attn_every
+    n_seg = _n_shared_calls(cfg)
+    seg_in = jax.tree.map(
+        lambda a: a[: n_seg * k].reshape((n_seg, k) + a.shape[1:]),
+        (params["layers"], cache["ssm"]))
+    shared = params["shared"]
+
+    def seg_body(x, scanned):
+        (p_seg, c_seg), attn_cache = scanned
+
+        def inner(x, pc):
+            p, c = pc
+            out, nc = mamba2.block_decode(p, cfg, x, c)
+            return x + out, nc
+
+        x, new_ssm = jax.lax.scan(inner, x, (p_seg, c_seg))
+        a_in = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        attn, new_attn = L.attention_decode(shared["attn"], cfg, a_in,
+                                            attn_cache, angles=angles)
+        x = x + attn
+        m_in = L.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(shared["mlp"], cfg, m_in)
+        return x, (new_ssm, new_attn)
+
+    x, (new_ssm, new_attn) = jax.lax.scan(seg_body, x,
+                                          (seg_in, cache["attn"]))
+    new_ssm = jax.tree.map(
+        lambda a: a.reshape((n_seg * k,) + a.shape[2:]), new_ssm)
+    for li in range(n_seg * k, cfg.n_layers):
+        p = jax.tree.map(lambda a: a[li], params["layers"])
+        c = jax.tree.map(lambda a: a[li], cache["ssm"])
+        out, nc = mamba2.block_decode(p, cfg, x, c)
+        x = x + out
+        new_ssm = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b[None]], axis=0), new_ssm, nc)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, {"ssm": new_ssm, "attn": new_attn}

@@ -1,0 +1,807 @@
+"""Layer primitives shared by the architecture zoo.
+
+Pure-functional JAX; parameters are plain dict pytrees. Every intermediate is
+annotated with *logical* sharding axes via ``repro.parallel.shard`` so the
+same code serves single-device smoke tests and 512-chip pjit dry-runs.
+
+Each primitive has an ``init_*`` (params), ``*_axes`` (logical axis names for
+the param pytree — consumed by the sharding policy), and an apply function.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * scale
+
+
+def _embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float, *, use_pallas: bool = False):
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.rmsnorm(x, params["scale"], eps=eps)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def qk_head_norm(scale, x, eps: float):
+    """Per-head RMSNorm over head_dim (gemma3 / qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_inv_freq(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float,
+                sections: Tuple[int, ...] = ()) -> jax.Array:
+    """positions: (..., S) int32 for standard; (3, ..., S) for M-RoPE.
+
+    Returns angles (..., S, head_dim//2) float32.
+    """
+    inv = rope_inv_freq(head_dim, theta)  # (hd/2,)
+    if sections:
+        # M-RoPE (Qwen2-VL): the frequency dim is split into len(sections)
+        # groups; group g uses positions[g] (temporal / height / width).
+        assert positions.ndim >= 2 and positions.shape[0] == len(sections)
+        angles = positions[..., None].astype(jnp.float32) * inv  # (3,...,S,hd/2)
+        parts = []
+        off = 0
+        for g, width in enumerate(sections):
+            parts.append(angles[g, ..., off:off + width])
+            off += width
+        return jnp.concatenate(parts, axis=-1)
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); angles: (B, S, hd/2) or (S, hd/2).
+
+    NeoX-style rotate-half (matches Llama/Qwen/Gemma HF implementations).
+    """
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[..., None, :]  # (B,S,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    if angles.ndim == 2:
+        cos, sin = cos[None], sin[None]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, causal / sliding-window / cross, train + decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, hq, hd), d),
+        "wk": _dense_init(ks[1], (d, hkv, hd), d),
+        "wv": _dense_init(ks[2], (d, hkv, hd), d),
+        "wo": _dense_init(ks[3], (hq, hd, d), hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def attention_axes(cfg: ModelConfig):
+    ax = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    if cfg.qkv_bias:
+        ax["bq"] = ("heads", None)
+        ax["bk"] = ("kv_heads", None)
+        ax["bv"] = ("kv_heads", None)
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = qk_head_norm(params["q_norm"], q, cfg.norm_eps)
+        k = qk_head_norm(params["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def mha_core(q, k, v, *, causal: bool, window: Optional[int],
+             q_positions: Optional[jax.Array] = None,
+             kv_positions: Optional[jax.Array] = None,
+             kv_len: Optional[jax.Array] = None,
+             softcap: Optional[float] = None,
+             scale: Optional[float] = None) -> jax.Array:
+    """Grouped-query attention core, fp32 softmax.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D). Hq % Hkv == 0.
+    q_positions/kv_positions: 1D (Sq,)/(Skv,) absolute positions shared
+    across the batch; kv_len: (B,) masks the cache tail in decode.
+
+    Masking is a compact *additive* (Sq, Skv) fp32 term — building a
+    broadcast boolean mask at the grouped-head score shape makes XLA hoist
+    a full (B,Hkv,G,Sq,Skv) invariant out of the layer scan (gigabytes of
+    loop-carried traffic; observed before this was rewritten).
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv, dtype=jnp.int32)
+    qp = q_positions[:, None]   # (Sq, 1)
+    kp = kv_positions[None, :]  # (1, Skv)
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= (qp - kp) < window
+    addmask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)
+    scores = scores + addmask  # broadcast over (B, Hkv, G)
+    if kv_len is not None:
+        tail = jnp.where(kv_positions[None, :] < kv_len[:, None], 0.0, -1e30)
+        scores = scores + tail[:, None, None, None, :].astype(jnp.float32)
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def flash_mha(q, k, v, *, causal: bool = True,
+              softcap: Optional[float] = None,
+              scale: Optional[float] = None,
+              bq: int = 512, bkv: int = 1024,
+              q_offset=0) -> jax.Array:
+    """Flash-style attention in pure JAX: q-block x kv-block tiling with an
+    online softmax, kv-scan body checkpointed so neither forward nor
+    backward ever materializes an (Sq, Skv) score tensor to HBM. This is
+    the jnp twin of kernels/flash_attention.py and is what the dry-run
+    lowers (Pallas cannot lower on the CPU backend) — without it the
+    roofline memory term is dominated by score traffic that would not
+    exist on the real deployment.
+    """
+    B, S, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    if S % bq != 0 or Skv % bkv != 0:
+        return mha_core(q, k, v, causal=causal, window=None, softcap=softcap,
+                        scale=scale)
+    nq, nkv = S // bq, Skv // bkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    kc = k.reshape(B, nkv, bkv, Hkv, D)
+    vc = v.reshape(B, nkv, bkv, Hkv, D)
+
+    def one_q_block(i):
+        qb = jax.lax.dynamic_slice_in_dim(qg, i * bq, bq, axis=1)
+        q_pos = q_offset + i * bq + jnp.arange(bq)
+
+        @jax.checkpoint
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kb, vb, j = inp  # (B,bkv,Hkv,D), (B,bkv,Hkv,D), ()
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            if causal:
+                kv_pos = j * bkv + jnp.arange(bkv)
+                mask = q_pos[:, None] >= kv_pos[None, :]
+                s = s + jnp.where(mask, 0.0, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(q.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        if causal:
+            # blocks with j >= n_valid are fully masked for this q block
+            n_valid = jnp.minimum(
+                (q_offset + (i + 1) * bq + bkv - 1) // bkv, nkv)
+        else:
+            n_valid = nkv
+        ks_ = kc.transpose(1, 0, 2, 3, 4)
+        vs_ = vc.transpose(1, 0, 2, 3, 4)
+
+        def body(carry, inp):
+            kb, vb, j = inp
+            new_carry, _ = kv_step(carry, (kb, vb, j))
+            if causal:
+                skip = j >= n_valid
+                new_carry = jax.tree.map(
+                    lambda old, new: jnp.where(skip, old, new), carry,
+                    new_carry)
+            return new_carry, None
+
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (ks_, vs_, jnp.arange(nkv)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)  # (B, Hkv, G, bq, D)
+
+    blocks = jax.lax.map(one_q_block, jnp.arange(nq))  # (nq,B,Hkv,G,bq,D)
+    out = blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, Hq, D)
+    return out
+
+
+def chunked_mha(q, k, v, *, causal: bool, window: Optional[int],
+                softcap: Optional[float] = None, chunk: int = 2048):
+    """Q-chunked attention: never materializes the full (Sq, Skv) score
+    matrix. For sliding-window layers only a static KV band per q-chunk is
+    read, making local attention truly O(S * window) — this is what lets
+    gemma3 run the 500k-context cells.
+    """
+    B, S, H, D = q.shape
+    if S % chunk != 0:
+        return mha_core(q, k, v, causal=causal, window=window,
+                        softcap=softcap)
+    nq = S // chunk
+
+    if window is not None and window < S:
+        band = min(chunk + window, S)
+
+        def body(i):
+            q0 = i * chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, q0, chunk, axis=1)
+            k0 = jnp.clip(q0 + chunk - band, 0, S - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, k0, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, k0, band, axis=1)
+            qp = q0 + jnp.arange(chunk, dtype=jnp.int32)
+            kp = k0 + jnp.arange(band, dtype=jnp.int32)
+            return mha_core(qc, kc, vc, causal=causal, window=window,
+                            q_positions=qp, kv_positions=kp, softcap=softcap)
+    else:
+        def body(i):
+            q0 = i * chunk
+            qc = jax.lax.dynamic_slice_in_dim(q, q0, chunk, axis=1)
+            qp = q0 + jnp.arange(chunk, dtype=jnp.int32)
+            return mha_core(qc, k, v, causal=causal, window=window,
+                            q_positions=qp, kv_positions=None,
+                            softcap=softcap)
+
+    outs = jax.lax.map(body, jnp.arange(nq))  # (nq, B, chunk, H, D)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D)
+
+
+_CHUNK_THRESHOLD = 4096
+
+
+def sp_flash_attention(q, k, v, *, causal: bool, softcap, seq_axis: str,
+                       batch_axis):
+    """Sequence-parallel attention: the q rows are sharded over
+    ``seq_axis`` (each shard computes S/n rows against the all-gathered
+    KV) — proper compute sharding for archs whose head count does not
+    divide the model axis (replicating attention burns 16x compute;
+    sharding the sequence via plain constraints makes GSPMD fully
+    rematerialize the flash block slices)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.parallel.sharding import current_rules
+
+    rules = current_rules()
+    mesh = rules.mesh
+    spec = P(batch_axis, seq_axis, None, None)
+
+    def local(q_l, k_l, v_l):
+        k_full = jax.lax.all_gather(k_l, seq_axis, axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_l, seq_axis, axis=1, tiled=True)
+        S_loc = q_l.shape[1]
+        off = jax.lax.axis_index(seq_axis) * S_loc
+        return flash_mha(q_l, k_full, v_full, causal=causal,
+                         softcap=softcap, q_offset=off,
+                         bq=min(512, S_loc))
+
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec, check_vma=False)(q, k, v)
+
+
+def attention(params, cfg: ModelConfig, x, *, angles=None, causal=True,
+              window: Optional[int] = None, kv_x=None, softcap=None):
+    """Self (or cross, via kv_x) attention for full-sequence passes."""
+    dt = x.dtype
+    q, k, v = (None, None, None)
+    if kv_x is None:
+        q, k, v = _project_qkv(params, x, cfg)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + params["bq"].astype(dt)
+            k = k + params["bk"].astype(dt)
+            v = v + params["bv"].astype(dt)
+    if angles is not None and kv_x is None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+
+    S = q.shape[1]
+    from repro.parallel.sharding import current_rules
+    _rules = current_rules()
+    sp_axis = _rules.physical("attn_sp") if _rules is not None else None
+    if cfg.attn_stub:
+        # kernel-substitution analysis: the attention core is replaced by
+        # a zero map (projections kept live) so core HLO traffic can be
+        # measured by difference
+        out = (q + (jnp.mean(k) + jnp.mean(v)) * 0).astype(q.dtype)
+    elif cfg.use_pallas and kv_x is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+    elif (sp_axis is not None and kv_x is None and causal
+          and window is None and S >= 8192):
+        out = sp_flash_attention(q, k, v, causal=True, softcap=softcap,
+                                 seq_axis=sp_axis,
+                                 batch_axis=_rules.physical("batch"))
+    elif (kv_x is None and window is not None and window < S
+          and S > _CHUNK_THRESHOLD):
+        # sliding-window layers: static KV band per q-chunk (O(S*w))
+        out = chunked_mha(q, k, v, causal=causal, window=window,
+                          softcap=softcap)
+    elif kv_x is None and causal and window is None and S >= 1024:
+        # full causal attention: flash-style online softmax (no (S,S)
+        # score tensor ever reaches HBM)
+        out = flash_mha(q, k, v, causal=True, softcap=softcap)
+    else:
+        out = mha_core(q, k, v, causal=causal and kv_x is None,
+                       window=window, softcap=softcap)
+    out = shard(out, "batch", "seq", "heads", None)
+    return jnp.einsum("bshd,hdo->bso", out, params["wo"].astype(dt))
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache, *, angles=None,
+                     window: Optional[int] = None, softcap=None):
+    """Single-token decode with a KV cache.
+
+    x: (B, 1, d). cache: {"k": (B, S_max, Hkv, D), "v": ..., "len": (B,)}.
+    Returns (out (B,1,d), new_cache).
+    """
+    dt = x.dtype
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k_new = apply_rope(k_new, angles)
+
+    idx = cache["len"][0]  # uniform decode position across batch
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+
+    B = x.shape[0]
+    q_pos = jnp.full((1,), idx, jnp.int32)
+    kv_len = jnp.full((B,), idx + 1, jnp.int32)
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        out = kops.decode_attention(q, k.astype(dt), v.astype(dt),
+                                    kv_len=kv_len, window=window,
+                                    q_pos=q_pos, softcap=softcap)
+    else:
+        out = mha_core(q, k.astype(dt), v.astype(dt), causal=True,
+                       window=window, q_positions=q_pos,
+                       kv_positions=None, kv_len=kv_len, softcap=softcap)
+    out = jnp.einsum("bshd,hdo->bso", out, params["wo"].astype(dt))
+    new_cache = {"k": k, "v": v, "len": cache["len"] + 1}
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16, window: Optional[int] = None):
+    """Stacked (per-layer) KV cache. Sliding-window layers allocate only
+    the window (gemma3 long-context decode feasibility)."""
+    s = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "len": jnp.zeros((n_layers, batch), jnp.int32),
+    }
+
+
+def kv_cache_axes():
+    return {"k": (None, "batch", "kv_seq", "kv_heads", None),
+            "v": (None, "batch", "kv_seq", "kv_heads", None),
+            "len": (None, "batch")}
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated silu / gelu / relu^2)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "relu2":  # nemotron/minitron: no gate
+        return {"wu": _dense_init(ks[0], (d, f), d),
+                "wd": _dense_init(ks[1], (f, d), f)}
+    return {"wg": _dense_init(ks[0], (d, f), d),
+            "wu": _dense_init(ks[1], (d, f), d),
+            "wd": _dense_init(ks[2], (f, d), f)}
+
+
+def mlp_axes(cfg: ModelConfig):
+    if cfg.act == "relu2":
+        return {"wu": ("embed", "ff"), "wd": ("ff", "embed")}
+    return {"wg": ("embed", "ff"), "wu": ("embed", "ff"),
+            "wd": ("ff", "embed")}
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    if cfg.act == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(cfg.act)
+
+
+def mlp(params, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.act == "relu2":
+        h = _act(cfg, jnp.einsum("bsd,df->bsf", x, params["wu"].astype(dt)))
+    else:
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, params["wu"].astype(dt))
+        h = _act(cfg, g) * u
+    h = shard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — expert-parallel via shard_map (production path) with a
+# pure-local fallback (single-device smoke tests).
+#
+# Layout: tokens are sharded over the data axes and *replicated* over the
+# `model` axis; expert weights are sharded E over `model` (EP) and d over the
+# FSDP axis. Each device routes its local tokens, builds a capacity buffer for
+# ITS experts only (local scatter — no giant (T,E,C) dispatch tensor), runs the
+# expert FFN, gathers back, and a single psum over `model` combines expert
+# contributions (Megatron-style). FSDP weight shards are all-gathered
+# explicitly inside the shard_map (DeepSeek-style EP+FSDP).
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, e), d),
+        "wg": _dense_init(ks[1], (e, d, f), d),
+        "wu": _dense_init(ks[2], (e, d, f), d),
+        "wd": _dense_init(ks[3], (e, f, d), f),
+    }
+
+
+def moe_axes():
+    return {"router": ("embed_tbl", None),
+            "wg": ("experts", "embed", "expert_ff"),
+            "wu": ("experts", "embed", "expert_ff"),
+            "wd": ("experts", "expert_ff", "embed")}
+
+
+def _moe_route(cfg: ModelConfig, xt, router, e_offset, E_loc, C):
+    """Routing + slot bookkeeping (cheap int32 work, no (T, d) traffic).
+
+    Returns (gate_vals (T, k), le/lp/keep per slot, aux)."""
+    T, _ = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True),
+                                     1e-9, None)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32)
+    counts = jnp.zeros((E,), jnp.int32)
+    slot_le, slot_lp, slot_keep = [], [], []
+    for s in range(k):
+        e_s = gate_idx[:, s]  # (T,)
+        oh = jax.nn.one_hot(e_s, E, dtype=jnp.int32)  # (T, E)
+        pos = counts[None, :] + jnp.cumsum(oh, axis=0) - oh
+        pos_s = jnp.take_along_axis(pos, e_s[:, None], axis=1)[:, 0]
+        counts = counts + oh.sum(0)
+        ce = ce + oh.sum(0).astype(jnp.float32)
+        is_local = (e_s >= e_offset) & (e_s < e_offset + E_loc)
+        keep = (pos_s < C) & is_local
+        slot_le.append(jnp.clip(e_s - e_offset, 0, E_loc - 1))
+        slot_lp.append(jnp.clip(pos_s, 0, C - 1))
+        slot_keep.append(keep)
+    aux = E * jnp.sum(me * (ce / (T * k)))
+    return gate_vals, slot_le, slot_lp, slot_keep, aux
+
+
+def _moe_inner(cfg: ModelConfig, xt, router, wg, wu, wd, e_offset, capacity):
+    """Route + dispatch + expert FFN + combine for the local token block
+    against a contiguous block of E_loc experts starting at e_offset.
+
+    xt: (T, d) local tokens. wg/wu/wd: (E_loc, d, f) local expert weights
+    (already FSDP-gathered). Returns (out (T, d), aux_loss scalar).
+
+    Dispatch is *index-based*: token row-indices are scattered into an
+    (E_loc, C) int32 table (drop-mode for over-capacity/non-local slots) and
+    the buffer is a single row-gather. The earlier formulation scattered a
+    keep-masked (T, d) copy of the activations per slot — ~k x T x d bytes
+    of pure zeros per layer (measured: the dominant memory-roofline term of
+    the MoE cells, see EXPERIMENTS.md §Perf iteration 1).
+    """
+    T, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = wg.shape[0]
+    dt = xt.dtype
+    C = capacity
+
+    gate_vals, slot_le, slot_lp, slot_keep, aux = _moe_route(
+        cfg, xt, router, e_offset, E_loc, C)
+
+    # ---- dispatch: scatter token indices, gather rows once ----
+    idx_tbl = jnp.full((E_loc, C), T, jnp.int32)  # T = dummy row
+    token_ids = jnp.arange(T, dtype=jnp.int32)
+    for s in range(k):
+        le = jnp.where(slot_keep[s], slot_le[s], E_loc)  # drop -> OOB
+        idx_tbl = idx_tbl.at[le, slot_lp[s]].set(token_ids, mode="drop")
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+    buf = jnp.take(x_pad, idx_tbl.reshape(-1), axis=0)
+    buf = buf.reshape(E_loc, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))  # (E_loc, C, d)
+
+    # ---- combine: per-slot row gather weighted by the gate ----
+    out = jnp.zeros((T, d), dt)
+    flat = out_buf.reshape(E_loc * C, d)
+    for s in range(k):
+        rows = jnp.take(flat, slot_le[s] * C + slot_lp[s], axis=0)
+        gate = jnp.where(slot_keep[s], gate_vals[:, s], 0.0)
+        out = out + rows * gate[:, None].astype(dt)
+    return out, aux
+
+
+def _capacity(cfg: ModelConfig, T: int) -> int:
+    """Capacity per expert. Decode-sized token counts get drop-free
+    capacity (C = T); training batches use the capacity-factor formula."""
+    C = max(int(T * cfg.top_k / cfg.n_experts * cfg.capacity_factor), 1)
+    if T <= 64:
+        C = max(C, T)
+    return min(C, T)
+
+
+def _moe_inner_dsharded(cfg: ModelConfig, xt, router, wg, wu, wd,
+                        e_offset, capacity, fsdp_axis):
+    """Small-T (decode) expert FFN against d-sharded weights: partial
+    contraction over the local d-shard + psum, avoiding the per-layer
+    (E_loc, d, f) weight all-gather that dominates decode collectives."""
+    T, d = xt.shape
+    E_loc = wg.shape[0]
+    d_shard = wg.shape[1]
+    n_shard = d // d_shard
+    dt = xt.dtype
+    C = capacity
+
+    gate_vals, slot_le, slot_lp, slot_keep, aux = _moe_route(
+        cfg, xt, router, e_offset, E_loc, C)
+
+    idx_tbl = jnp.full((E_loc, C), T, jnp.int32)
+    token_ids = jnp.arange(T, dtype=jnp.int32)
+    for s in range(cfg.top_k):
+        le = jnp.where(slot_keep[s], slot_le[s], E_loc)
+        idx_tbl = idx_tbl.at[le, slot_lp[s]].set(token_ids, mode="drop")
+    x_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+    buf = jnp.take(x_pad, idx_tbl.reshape(-1), axis=0).reshape(E_loc, C, d)
+
+    # slice my d-shard of the dispatched rows, contract, psum partials
+    shard_i = jax.lax.axis_index(fsdp_axis)
+    buf_d = jax.lax.dynamic_slice_in_dim(buf, shard_i * d_shard, d_shard,
+                                         axis=2)
+    g = jnp.einsum("ecd,edf->ecf", buf_d, wg.astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", buf_d, wu.astype(dt))
+    g = jax.lax.psum(g, fsdp_axis)
+    u = jax.lax.psum(u, fsdp_axis)
+    h = jax.nn.silu(g) * u
+    out_d = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))  # d-sharded out
+    out_buf = jax.lax.all_gather(out_d, fsdp_axis, axis=2, tiled=True)
+
+    out = jnp.zeros((T, d), dt)
+    flat = out_buf.reshape(E_loc * C, d)
+    for s in range(cfg.top_k):
+        rows = jnp.take(flat, slot_le[s] * C + slot_lp[s], axis=0)
+        gate = jnp.where(slot_keep[s], gate_vals[:, s], 0.0)
+        out = out + rows * gate[:, None].astype(dt)
+    return out, aux
+
+
+def moe(params, cfg: ModelConfig, x):
+    """Top-k MoE. Returns (out, aux_loss). Expert-parallel when a mesh with a
+    `model` axis is active; pure local otherwise."""
+    from repro.parallel.sharding import current_rules
+    from jax.sharding import PartitionSpec as P
+    from jax import shard_map
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    rules = current_rules()
+    use_ep = (rules is not None and rules.mesh is not None
+              and rules.physical("experts") is not None)
+
+    if not use_ep:
+        T = B * S
+        C = _capacity(cfg, T)
+        out, aux = _moe_inner(cfg, x.reshape(T, d), params["router"],
+                              params["wg"], params["wu"], params["wd"], 0, C)
+        return out.reshape(B, S, d), aux
+
+    mesh = rules.mesh
+    ep_axis = rules.physical("experts")          # e.g. "model"
+    fsdp_axis = rules.physical("embed")          # e.g. "data" (may be None)
+    batch_axis = rules.physical("batch")         # e.g. ("pod", "data")
+    n_ep = mesh.shape[ep_axis] if isinstance(ep_axis, str) else 1
+    batch_names = ((batch_axis,) if isinstance(batch_axis, str)
+                   else tuple(batch_axis or ()))
+    n_dp = 1
+    for a in batch_names:
+        n_dp *= mesh.shape[a]
+
+    T_loc = max((B // max(n_dp, 1)) * S, S)
+    C = _capacity(cfg, T_loc)
+    E_loc = E // n_ep
+
+    w_spec = P(ep_axis, fsdp_axis, None)
+    x_spec = P(batch_axis, None, None)
+
+    def sharded_moe(xb, router, wg, wu, wd):
+        # xb: (B_loc, S, d); w*: (E_loc, d_shard, f)
+        b, s, dd = xb.shape
+        T = b * s
+        e_off = jax.lax.axis_index(ep_axis) * E_loc
+        if fsdp_axis is None:
+            out, aux = _moe_inner(cfg, xb.reshape(T, dd), router,
+                                  wg, wu, wd, e_off, C)
+        elif T <= 1024:
+            # decode-sized T: gathering (E_loc, d, f) weights costs far
+            # more than the activations — contract against the local
+            # d-shard and psum the partial sums instead (§Perf iter. 2)
+            out, aux = _moe_inner_dsharded(
+                cfg, xb.reshape(T, dd), router, wg, wu, wd, e_off, C,
+                fsdp_axis)
+        else:
+            wg_full = jax.lax.all_gather(wg, fsdp_axis, axis=1, tiled=True)
+            wu_full = jax.lax.all_gather(wu, fsdp_axis, axis=1, tiled=True)
+            wd_full = jax.lax.all_gather(wd, fsdp_axis, axis=2, tiled=True)
+            out, aux = _moe_inner(cfg, xb.reshape(T, dd), router,
+                                  wg_full, wu_full, wd_full, e_off, C)
+        out = jax.lax.psum(out, ep_axis)
+        aux = jax.lax.pmean(aux, batch_names) if batch_names else aux
+        return out.reshape(b, s, dd), aux
+
+    fn = shard_map(
+        sharded_moe, mesh=mesh,
+        in_specs=(x_spec, P(None, None),
+                  P(ep_axis, fsdp_axis, None) if fsdp_axis else P(ep_axis, None, None),
+                  P(ep_axis, fsdp_axis, None) if fsdp_axis else P(ep_axis, None, None),
+                  P(ep_axis, None, fsdp_axis) if fsdp_axis else P(ep_axis, None, None)),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    del w_spec
+    out, aux = fn(x, params["router"], params["wg"], params["wu"],
+                  params["wd"])
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig):
+    p = {"embedding": _embed_init(key, (cfg.vocab_size, cfg.d_model))}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = _dense_init(k2, (cfg.d_model, cfg.vocab_size),
+                                   cfg.d_model)
+    return p
+
+
+def embed_axes(cfg: ModelConfig):
+    ax = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        ax["unembed"] = ("embed", "vocab")
+    return ax
+
+
+def embed(params, cfg: ModelConfig, tokens):
+    dt = compute_dtype(cfg)
+    x = jnp.take(params["embedding"].astype(dt), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(dt).T
+    else:
+        w = params["unembed"].astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,354 @@
+"""Mamba-2 (state-space duality) language model.
+
+The SSD forward uses the chunked dual form: quadratic attention-like compute
+inside fixed-length chunks (MXU-friendly matmuls) and a linear recurrence
+carrying the (H, P, N) state across chunks. The single-step decode carries a
+constant-size state — this is what makes the ``long_500k`` cell feasible.
+
+``repro.kernels.ssd_scan`` is the Pallas TPU version of the chunked form;
+this file is also its jnp reference when ``use_pallas=False``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked dual form)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """x: (b, S, H, P); dt: (b, S, H); A: (H,) (negative);
+    B, C: (b, S, G, N) with H % G == 0. Returns (y (b,S,H,P),
+    final_state (b,H,P,N))."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # (b,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    nc = S // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bc = Bh.reshape(b, nc, chunk, H, N)
+    Cc = Ch.reshape(b, nc, chunk, H, N)
+
+    a = dtc * A  # (b,nc,L,H) log-decay, negative
+    cum = jnp.cumsum(a, axis=2)  # within-chunk cumulative
+    seg_end = cum[:, :, -1, :]  # (b,nc,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    CB = jnp.einsum("bclhn,bcmhn->bchlm", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    cumh = cum.transpose(0, 1, 3, 2)  # (b,nc,H,L)
+    seg = cumh[:, :, :, :, None] - cumh[:, :, :, None, :]  # cum[l]-cum[m]
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    # mask BEFORE exp: anti-causal entries have positive exponents that
+    # would overflow to inf (inf * 0 = nan)
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    M = CB * decay * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", M, xc.astype(jnp.float32))
+
+    # ---- chunk states ----
+    # state_c = sum_m exp(seg_end - cum[m]) * dt[m] * B[m] (outer) x[m]
+    w = jnp.exp(seg_end[:, :, None, :] - cum) * dtc  # (b,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp", Bc.astype(jnp.float32),
+                        w, xc.astype(jnp.float32))  # (b,nc,H,N,P)
+
+    # ---- inter-chunk recurrence ----
+    seg_decay = jnp.exp(seg_end)  # (b,nc,H)
+
+    def scan_f(h, inp):
+        st, sd = inp  # (b,H,N,P), (b,H)
+        h_next = h * sd[:, :, None, None] + st
+        return h_next, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    hT, h_in = jax.lax.scan(scan_f, h0,
+                            (states.transpose(1, 0, 2, 3, 4),
+                             seg_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (b,nc,H,N,P)
+
+    # y_inter[l] = C[l] . (h_in * exp(cum[l]))
+    y_inter = jnp.einsum("bclhn,bchnp,bclh->bclhp", Cc.astype(jnp.float32),
+                         h_in, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y.astype(x.dtype), hT
+
+
+def ssd_sequential(x, dt, A, B, C, h0=None):
+    """Step-by-step oracle (used by tests and as the decode rule).
+
+    Same signature as ssd_chunked; O(S) sequential scan."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (b,H,P), (b,H), (b,H,N), (b,H,N)
+        decay = jnp.exp(dtt * A)[:, :, None, None]  # (b,H,1,1)
+        h = h * decay + (dtt[:, :, None] * Bt)[:, :, :, None] * xt[:, :, None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, h)
+        return h, y
+
+    h0 = jnp.zeros((b, H, N, P), jnp.float32) if h0 is None else h0
+    hT, ys = jax.lax.scan(step, h0, (xf.transpose(1, 0, 2, 3),
+                                     dtf.transpose(1, 0, 2),
+                                     Bh.transpose(1, 0, 2, 3),
+                                     Ch.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), hT
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, nh, w = (cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads,
+                   cfg.ssm_conv_width)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": L.init_rmsnorm(d),
+        "wz": L._dense_init(ks[0], (d, di), d),
+        "wx": L._dense_init(ks[1], (d, di), d),
+        "wB": L._dense_init(ks[2], (d, g * n), d),
+        "wC": L._dense_init(ks[3], (d, g * n), d),
+        "wdt": L._dense_init(ks[4], (d, nh), d),
+        "conv_x": L._dense_init(ks[5], (w, di), w),
+        "conv_B": L._dense_init(ks[6], (w, g * n), w),
+        "conv_C": L._dense_init(ks[7], (w, g * n), w),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(di),
+        "wo": L._dense_init(ks[0], (di, d), di),
+    }
+
+
+def block_axes(cfg: ModelConfig):
+    return {
+        "norm": L.rmsnorm_axes(),
+        "wz": ("embed", "ssm_inner"),
+        "wx": ("embed", "ssm_inner"),
+        "wB": ("embed", None),
+        "wC": ("embed", None),
+        "wdt": ("embed", "ssm_heads"),
+        "conv_x": (None, "ssm_inner"),
+        "conv_B": (None, None),
+        "conv_C": (None, None),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "gate_norm": {"scale": ("ssm_inner",)},
+        "wo": ("ssm_inner", "embed"),
+    }
+
+
+def _causal_depthwise_conv(x, w):
+    """x: (B, S, C); w: (W, C). Causal depthwise conv, left-padded."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out
+
+
+def block_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d). Full-sequence (train/prefill)."""
+    dt_ = x.dtype
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"].astype(dt_))
+    xr = jnp.einsum("bsd,de->bse", h, p["wx"].astype(dt_))
+    Br = jnp.einsum("bsd,de->bse", h, p["wB"].astype(dt_))
+    Cr = jnp.einsum("bsd,de->bse", h, p["wC"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", h, p["wdt"].astype(dt_))
+
+    xr = jax.nn.silu(_causal_depthwise_conv(xr, p["conv_x"].astype(dt_)))
+    Br = jax.nn.silu(_causal_depthwise_conv(Br, p["conv_B"].astype(dt_)))
+    Cr = jax.nn.silu(_causal_depthwise_conv(Cr, p["conv_C"].astype(dt_)))
+    xr = shard(xr, "batch", "seq", "ssm_inner")
+
+    B_, S, _ = x.shape
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    xh = xr.reshape(B_, S, nh, hd)
+    Bm = Br.reshape(B_, S, g, n)
+    Cm = Cr.reshape(B_, S, g, n)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cfg.use_pallas:
+        from repro.kernels import ops as kops
+        y, _ = kops.ssd_scan(xh, dtv, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    elif S % cfg.ssm_chunk == 0 and S > cfg.ssm_chunk:
+        y, _ = ssd_chunked(xh, dtv, A, Bm, Cm, cfg.ssm_chunk)
+    else:
+        y, _ = ssd_sequential(xh, dtv, A, Bm, Cm)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B_, S, cfg.d_inner)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+
+
+# ---------------------------------------------------------------------------
+# single-step decode with carried state
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    w = cfg.ssm_conv_width
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                           jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, g * n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, g * n), dtype),
+    }
+
+
+def block_cache_axes():
+    return {"state": ("batch", "ssm_heads", None, None),
+            "conv_x": ("batch", None, "ssm_inner"),
+            "conv_B": ("batch", None, None),
+            "conv_C": ("batch", None, None)}
+
+
+def _conv_step(buf, xt, w):
+    """buf: (B, W-1, C) past inputs; xt: (B, C). Returns (y (B,C), new buf)."""
+    seq = jnp.concatenate([buf, xt[:, None, :].astype(buf.dtype)], axis=1)
+    y = jnp.einsum("bwc,wc->bc", seq.astype(xt.dtype), w)
+    return y, seq[:, 1:, :]
+
+
+def block_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d). Returns (out (B, 1, d), new_cache)."""
+    dt_ = x.dtype
+    h = L.rmsnorm(p["norm"], x, cfg.norm_eps)[:, 0]  # (B, d)
+    z = h @ p["wz"].astype(dt_)
+    xr = h @ p["wx"].astype(dt_)
+    Br = h @ p["wB"].astype(dt_)
+    Cr = h @ p["wC"].astype(dt_)
+    dt = h @ p["wdt"].astype(dt_)
+
+    xr, conv_x = _conv_step(cache["conv_x"], xr, p["conv_x"].astype(dt_))
+    Br, conv_B = _conv_step(cache["conv_B"], Br, p["conv_B"].astype(dt_))
+    Cr, conv_C = _conv_step(cache["conv_C"], Cr, p["conv_C"].astype(dt_))
+    xr, Br, Cr = jax.nn.silu(xr), jax.nn.silu(Br), jax.nn.silu(Cr)
+
+    B_, = dt.shape[:1]
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_n_groups, cfg.ssm_state
+    xh = xr.reshape(B_, nh, hd).astype(jnp.float32)
+    Bm = jnp.repeat(Br.reshape(B_, g, n), nh // g, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cr.reshape(B_, g, n), nh // g, axis=1).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["A_log"])
+
+    state = cache["state"]
+    decay = jnp.exp(dtv * A)[:, :, None, None]
+    state = state * decay + (dtv[:, :, None] * Bm)[:, :, :, None] * xh[:, :, None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Cm, state)  # (B, nh, hd)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B_, cfg.d_inner).astype(dt_)
+    y = L.rmsnorm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["wo"].astype(dt_))[:, None, :]
+    new_cache = {"state": state, "conv_x": conv_x, "conv_B": conv_B,
+                 "conv_C": conv_C}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init(cfg: ModelConfig, key) -> dict:
+    k_embed, k_layers = jax.random.split(key, 2)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embed(k_embed, cfg),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    stack = jax.tree.map(lambda axes: (None,) + axes, block_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embed_axes(cfg),
+        "layers": stack,
+        "final_norm": L.rmsnorm_axes(),
+    }
+
+
+def apply_hidden(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], cfg, tokens)
+    x = shard(x, "batch", "seq", "act_embed")
+
+    blk = _remat(cfg, lambda pp, xx: block_apply(pp, cfg, xx))
+
+    def body(carry, p):
+        return carry + blk(p, carry), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def apply(cfg: ModelConfig, params, batch):
+    x, aux = apply_hidden(cfg, params, batch)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    del max_len  # O(1) state regardless of context length
+    one = init_block_cache(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(),
+        one)
+
+
+def cache_axes(cfg: ModelConfig):
+    return jax.tree.map(lambda axes: (None,) + axes, block_cache_axes(),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    x = L.embed(params["embed"], cfg, tokens)
+
+    def body(x, scanned):
+        p, c = scanned
+        out, nc = block_decode(p, cfg, x, c)
+        return x + out, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,84 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each entry binds a ``ModelConfig`` to the family implementation
+(init / apply / init_cache / decode_step / param_axes / cache_axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable, Dict, Optional
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    apply: Callable[..., Any]
+    apply_hidden: Callable[..., Any]
+    param_axes: Callable[..., Any]
+    init_cache: Optional[Callable[..., Any]] = None
+    decode_step: Optional[Callable[..., Any]] = None
+    cache_axes: Optional[Callable[..., Any]] = None
+
+
+_FAMILY_MODULE = {
+    "dense": "repro.models.transformer",
+    "moe": "repro.models.transformer",
+    "vlm": "repro.models.transformer",
+    "ssm": "repro.models.mamba2",
+    "hybrid": "repro.models.hybrid",
+    "audio": "repro.models.whisper",
+}
+
+_CONFIGS: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register_config(name: str):
+    def deco(fn):
+        _CONFIGS[name] = fn
+        return fn
+    return deco
+
+
+def _load_configs():
+    if _CONFIGS:
+        return
+    from repro import configs as cfg_pkg  # noqa: F401
+    for mod in cfg_pkg.CONFIG_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def list_architectures():
+    _load_configs()
+    return sorted(_CONFIGS)
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    _load_configs()
+    if name not in _CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; known: {list_architectures()}")
+    cfg = _CONFIGS[name]()
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def get_model(name_or_cfg, **overrides) -> Model:
+    cfg = (name_or_cfg if isinstance(name_or_cfg, ModelConfig)
+           else get_config(name_or_cfg, **overrides))
+    mod = importlib.import_module(_FAMILY_MODULE[cfg.family])
+    init = mod.init
+    if cfg.family == "audio":
+        init = functools.partial(mod.init, max_target_len=32_768)
+    return Model(
+        cfg=cfg,
+        init=init,
+        apply=mod.apply,
+        apply_hidden=mod.apply_hidden,
+        param_axes=mod.param_axes,
+        init_cache=getattr(mod, "init_cache", None),
+        decode_step=getattr(mod, "decode_step", None),
+        cache_axes=getattr(mod, "cache_axes", None),
+    )

@@ -1,0 +1,346 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families.
+
+Variants are driven entirely by ``ModelConfig``:
+  * GQA with optional QKV bias / qk-norm / logit softcap
+  * RoPE (standard, dual-theta local/global for gemma3, M-RoPE for qwen2-vl)
+  * sliding-window attention with a per-layer local/global pattern (gemma3)
+  * MoE FFN (expert-parallel, see layers.moe)
+  * vision-patch stub inputs (qwen2-vl backbone; frontend per assignment)
+
+Layer parameters are stacked along a leading layer axis and consumed with
+``jax.lax.scan`` so HLO size is O(1) in depth (the 94-layer MoE compiles
+fast). Archs with a local:global pattern (gemma3 5:1) use a *segmented*
+scan — one scan over segments with the pattern unrolled inside — so local
+layers statically use banded sliding-window attention (true O(S*w) compute)
+and global layers full attention, with no wasted branch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _layer_axes(cfg: ModelConfig):
+    ax = {
+        "ln1": L.rmsnorm_axes(),
+        "attn": L.attention_axes(cfg),
+        "ln2": L.rmsnorm_axes(),
+    }
+    if cfg.is_moe:
+        ax["moe"] = L.moe_axes()
+    else:
+        ax["mlp"] = L.mlp_axes(cfg)
+    return ax
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    k_embed, k_layers = jax.random.split(key, 2)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": L.init_embed(k_embed, cfg),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical axis names mirroring ``init`` (leading layer axis on stacks)."""
+    stack = jax.tree.map(lambda axes: (None,) + axes, _layer_axes(cfg),
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return {
+        "embed": L.embed_axes(cfg),
+        "layers": stack,
+        "final_norm": L.rmsnorm_axes(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# rope helpers
+# ---------------------------------------------------------------------------
+
+def mrope_positions(cfg: ModelConfig, S: int) -> jax.Array:
+    """(3, S) — temporal/height/width positions: a vision patch grid at the
+    start of the sequence (stub frontend), text after it."""
+    P = min(cfg.n_vision_patches, S)
+    grid_w = max(int(P ** 0.5), 1)
+    i = jnp.arange(S)
+    in_img = i < P
+    t = jnp.where(in_img, 0, i - P + 1)
+    h = jnp.where(in_img, i // grid_w, i - P + 1)
+    w = jnp.where(in_img, i % grid_w, i - P + 1)
+    return jnp.stack([t, h, w]).astype(jnp.int32)
+
+
+def _angles_for(cfg: ModelConfig, positions):
+    """(angles_local, angles_global) for the given positions."""
+    if cfg.rope_kind == "none":
+        return None, None
+    sections = cfg.mrope_sections if cfg.rope_kind == "mrope" else ()
+    a_local = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta, sections)
+    if cfg.rope_theta_global:
+        a_global = L.rope_angles(positions, cfg.head_dim,
+                                 cfg.rope_theta_global, sections)
+    else:
+        a_global = a_local
+    return a_local, a_global
+
+
+def _positions_for(cfg: ModelConfig, B: int, S: int):
+    if cfg.family == "vlm":
+        return mrope_positions(cfg, S)[:, None, :].repeat(B, 1)
+    return jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+
+
+def _layer_pattern(cfg: ModelConfig):
+    """List of per-layer window values (None = global/full attention)."""
+    if cfg.global_every:
+        return [None if (i + 1) % cfg.global_every == 0 else cfg.sliding_window
+                for i in range(cfg.n_layers)]
+    return [cfg.sliding_window] * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# forward (full-sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ModelConfig, window: Optional[int], x, p, angles):
+    a_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps, use_pallas=cfg.use_pallas)
+    attn = L.attention(p["attn"], cfg, a_in, angles=angles, causal=True,
+                       window=window, softcap=cfg.logit_softcap)
+    x = x + attn
+    x = shard(x, "batch", "seq", "act_embed")
+    m_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps, use_pallas=cfg.use_pallas)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        m_out, aux = L.moe(p["moe"], cfg, m_in)
+    else:
+        m_out = L.mlp(p["mlp"], cfg, m_in)
+    x = x + m_out
+    x = shard(x, "batch", "seq", "act_embed")
+    return x, aux
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat in ("full", "sqrt"):  # sqrt: layer remat inside the
+        return jax.checkpoint(fn)      # checkpointed group scan
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _segments(cfg: ModelConfig):
+    """(segment_len, n_segments, tail) for the pattern-scan layout."""
+    if not cfg.global_every:
+        return 1, cfg.n_layers, 0
+    seg = cfg.global_every
+    n_seg = cfg.n_layers // seg
+    return seg, n_seg, cfg.n_layers - seg * n_seg
+
+
+def _sqrt_factor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n)."""
+    best = 1
+    f = 1
+    while f * f <= n:
+        if n % f == 0:
+            best = f
+        f += 1
+    return best
+
+
+def _scan_layers(cfg: ModelConfig, x, stacked, step_fn):
+    """Run all layers via segmented scan. ``step_fn(x, p, window, li)`` is
+    called per layer (li = index within segment) and must return (x, aux).
+
+    remat == "sqrt" (uniform stacks only): sqrt-checkpointing — an outer
+    scan over ~sqrt(L) checkpointed groups of an inner scan, so the AD
+    residual stack holds O(sqrt(L)) layer inputs instead of O(L)
+    (EXPERIMENTS.md §Perf iteration 8: the 94-layer MoE's 12.6 GB of
+    carried layer inputs)."""
+    pattern = _layer_pattern(cfg)
+    seg, n_seg, tail = _segments(cfg)
+
+    if cfg.remat == "sqrt" and seg == 1 and tail == 0:
+        n_in = _sqrt_factor(cfg.n_layers)
+        n_out = cfg.n_layers // n_in
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_out, n_in) + a.shape[1:]), stacked)
+
+        @jax.checkpoint
+        def group_body(carry, p_grp):
+            def inner(c, p):
+                x, aux = c
+                x, a = step_fn(x, p, pattern[0], 0)
+                return (x, aux + a), None
+            c, _ = jax.lax.scan(inner, carry, p_grp)
+            return c, None
+
+        (x, aux), _ = jax.lax.scan(group_body,
+                                   (x, jnp.zeros((), jnp.float32)), grouped)
+        return x, aux
+
+    body_params = jax.tree.map(
+        lambda a: a[: seg * n_seg].reshape((n_seg, seg) + a.shape[1:]),
+        stacked)
+
+    def seg_body(carry, p_seg):
+        x, aux = carry
+        for j in range(seg):
+            p_j = jax.tree.map(lambda a: a[j], p_seg)
+            x, a = step_fn(x, p_j, pattern[j], j)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(seg_body, (x, jnp.zeros((), jnp.float32)),
+                               body_params)
+    for t in range(tail):
+        li = seg * n_seg + t
+        p_t = jax.tree.map(lambda a: a[li], stacked)
+        x, a = step_fn(x, p_t, pattern[li], 0)
+        aux = aux + a
+    return x, aux
+
+
+def apply_hidden(cfg: ModelConfig, params, batch):
+    """Full-sequence forward to final hidden states. batch: {"tokens":
+    (B, S) int32, optional "vision_embeds": (B, P, d)}.
+    Returns (hidden (B, S, d), aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens)
+    if cfg.family == "vlm" and batch.get("vision_embeds") is not None:
+        P = min(cfg.n_vision_patches, S)
+        ve = batch["vision_embeds"].astype(x.dtype)[:, :P]
+        x = jnp.concatenate([ve, x[:, P:]], axis=1)
+    x = shard(x, "batch", "seq", "act_embed")
+    angles_l, angles_g = _angles_for(cfg, _positions_for(cfg, B, S))
+
+    def step(x, p, window, _li):
+        angles = angles_g if window is None else angles_l
+        return _remat(cfg, functools.partial(_layer_fwd, cfg, window))(
+            x, p, angles)
+
+    x, aux = _scan_layers(cfg, x, params["layers"], step)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                  use_pallas=cfg.use_pallas)
+    return x, aux
+
+
+def apply(cfg: ModelConfig, params, batch):
+    """Returns (logits (B, S, V), aux_loss)."""
+    x, aux = apply_hidden(cfg, params, batch)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (single token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    return L.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+
+
+def cache_axes(cfg: ModelConfig):
+    return L.kv_cache_axes()
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """tokens: (B, 1). Returns (logits (B, 1, V), new_cache)."""
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], cfg, tokens)
+    x = shard(x, "batch", "seq", "act_embed")
+    idx = cache["len"][0, 0]  # uniform absolute decode position
+    if cfg.family == "vlm":
+        # same (t, h, w) mapping as mrope_positions for a single index
+        P = min(cfg.n_vision_patches, 10 ** 9)
+        gw = max(int(P ** 0.5), 1)
+        txt = idx - P + 1
+        t = jnp.where(idx < P, 0, txt)
+        h = jnp.where(idx < P, idx // gw, txt)
+        w = jnp.where(idx < P, idx % gw, txt)
+        pos = jnp.stack([t, h, w]).reshape(3, 1, 1)
+        pos = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        pos = jnp.broadcast_to(idx, (B, 1)).astype(jnp.int32)
+    angles_l, angles_g = _angles_for(cfg, pos)
+
+    pattern = _layer_pattern(cfg)
+    seg, n_seg, tail = _segments(cfg)
+    body_in = jax.tree.map(
+        lambda a: a[: seg * n_seg].reshape((n_seg, seg) + a.shape[1:]),
+        (params["layers"], cache))
+
+    def one_layer(x, p, layer_cache, window):
+        angles = angles_g if window is None else angles_l
+        a_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn, new_cache = L.attention_decode(
+            p["attn"], cfg, a_in, layer_cache, angles=angles, window=window,
+            softcap=cfg.logit_softcap)
+        x = x + attn
+        m_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            m_out, _ = L.moe(p["moe"], cfg, m_in)
+        else:
+            m_out = L.mlp(p["mlp"], cfg, m_in)
+        return x + m_out, new_cache
+
+    def seg_body(x, scanned):
+        p_seg, c_seg = scanned
+        new_cs = []
+        for j in range(seg):
+            p_j = jax.tree.map(lambda a: a[j], p_seg)
+            c_j = jax.tree.map(lambda a: a[j], c_seg)
+            x, nc = one_layer(x, p_j, c_j, pattern[j])
+            new_cs.append(nc)
+        stacked_c = jax.tree.map(lambda *xs: jnp.stack(xs), *new_cs)
+        return x, stacked_c
+
+    x, new_cache_body = jax.lax.scan(seg_body, x, body_in)
+    new_cache_body = jax.tree.map(
+        lambda a: a.reshape((seg * n_seg,) + a.shape[2:]), new_cache_body)
+    tail_caches = []
+    for t in range(tail):
+        li = seg * n_seg + t
+        p_t = jax.tree.map(lambda a: a[li], params["layers"])
+        c_t = jax.tree.map(lambda a: a[li], cache)
+        x, nc = one_layer(x, p_t, c_t, pattern[li])
+        tail_caches.append(nc)
+    if tail_caches:
+        tail_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_caches)
+        new_cache = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            new_cache_body, tail_stack)
+    else:
+        new_cache = new_cache_body
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, new_cache

@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the assignment the audio frontend (log-mel + conv downsampling) is a
+STUB: ``input_specs`` provides precomputed frame embeddings
+(B, encoder_seq, d_model). The encoder is bidirectional self-attention with
+sinusoidal positions; the decoder is causal self-attention + cross-attention
+with a learned positional table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+def sinusoid_positions(length: int, d: int) -> np.ndarray:
+    log_timescale = np.log(10_000.0) / (d // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(d // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "ln_x": L.init_rmsnorm(cfg.d_model),
+        "cross": L.init_attention(k2, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg),
+    }
+
+
+def init(cfg: ModelConfig, key, max_target_len: int = 4096) -> dict:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": L.init_embed(ks[2], cfg),
+        "pos_embed": L._embed_init(ks[3], (max_target_len, cfg.d_model)),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    def stack(ax):
+        return jax.tree.map(lambda t: (None,) + t, ax,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    enc = {"ln1": L.rmsnorm_axes(), "attn": L.attention_axes(cfg),
+           "ln2": L.rmsnorm_axes(), "mlp": L.mlp_axes(cfg)}
+    dec = {"ln1": L.rmsnorm_axes(), "attn": L.attention_axes(cfg),
+           "ln_x": L.rmsnorm_axes(), "cross": L.attention_axes(cfg),
+           "ln2": L.rmsnorm_axes(), "mlp": L.mlp_axes(cfg)}
+    return {
+        "embed": L.embed_axes(cfg),
+        "pos_embed": ("seq_tbl", "embed_tbl"),
+        "enc_layers": stack(enc),
+        "dec_layers": stack(dec),
+        "enc_norm": L.rmsnorm_axes(),
+        "final_norm": L.rmsnorm_axes(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, F, d) precomputed frame embeddings (stub frontend)."""
+    F = frames.shape[1]
+    pos = jnp.asarray(sinusoid_positions(F, cfg.d_model))
+    x = (frames + pos[None]).astype(L.compute_dtype(cfg))
+    x = shard(x, "batch", "seq", "act_embed")
+
+    def body(x, p):
+        a_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + L.attention(p["attn"], cfg, a_in, causal=False)
+        m_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], cfg, m_in)
+        return shard(x, "batch", "seq", "act_embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(cfg: ModelConfig, x, p, enc_out):
+    a_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + L.attention(p["attn"], cfg, a_in, causal=True)
+    c_in = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + L.attention(p["cross"], cfg, c_in, kv_x=enc_out, causal=False)
+    m_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], cfg, m_in)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def apply_hidden(cfg: ModelConfig, params, batch):
+    """batch: {"frames": (B, F, d), "tokens": (B, S)}."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    x = L.embed(params["embed"], cfg, tokens)
+    x = x + params["pos_embed"][:S].astype(x.dtype)[None]
+    x = shard(x, "batch", "seq", "act_embed")
+
+    def _body(x, p):
+        fn = lambda xx, pp: _dec_layer(cfg, xx, pp, enc_out)
+        if cfg.remat in ("dots", "full"):
+            fn = jax.checkpoint(fn)
+        return fn(x, p), None
+
+    x, _ = jax.lax.scan(_body, x, params["dec_layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def apply(cfg: ModelConfig, params, batch):
+    x, aux = apply_hidden(cfg, params, batch)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# decode: self-attention KV cache + precomputed cross KV
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    self_cache = L.init_kv_cache(cfg, batch, max_len, cfg.n_layers, dtype)
+    F = cfg.encoder_seq
+    cross = {
+        "k": jnp.zeros((cfg.n_layers, batch, F, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, F, cfg.n_kv_heads,
+                        cfg.head_dim), dtype),
+    }
+    return {"self": self_cache, "cross": cross}
+
+
+def cache_axes(cfg: ModelConfig):
+    return {
+        "self": L.kv_cache_axes(),
+        "cross": {"k": (None, "batch", None, "kv_heads", None),
+                  "v": (None, "batch", None, "kv_heads", None)},
+    }
+
+
+def prefill_cross(cfg: ModelConfig, params, frames):
+    """Precompute cross-attention K/V from the encoder output."""
+    enc_out = encode(cfg, params, frames)
+    dt = enc_out.dtype
+
+    def body(_, p):
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["cross"]["wv"].astype(dt))
+        if cfg.qkv_bias:
+            k = k + p["cross"]["bk"].astype(dt)
+            v = v + p["cross"]["bv"].astype(dt)
+        return None, {"k": k, "v": v}
+
+    _, cross = jax.lax.scan(body, None, params["dec_layers"])
+    return cross
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    B = tokens.shape[0]
+    idx = cache["self"]["len"][0, 0]
+    x = L.embed(params["embed"], cfg, tokens)
+    x = x + jnp.take(params["pos_embed"], jnp.full((1,), idx),
+                     axis=0).astype(x.dtype)[None]
+
+    def body(x, scanned):
+        p, self_c, cross_c = scanned
+        a_in = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        attn, new_self = L.attention_decode(p["attn"], cfg, a_in, self_c)
+        x = x + attn
+        c_in = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", c_in, p["cross"]["wq"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + p["cross"]["bq"].astype(dt)
+        out = L.mha_core(q, cross_c["k"].astype(dt), cross_c["v"].astype(dt),
+                         causal=False, window=None)
+        x = x + jnp.einsum("bshd,hdo->bso", out,
+                           p["cross"]["wo"].astype(dt))
+        m_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], cfg, m_in)
+        return x, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x)
+    return logits, {"self": new_self, "cross": cache["cross"]}

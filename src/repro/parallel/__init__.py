@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    axis_rules,
+    current_rules,
+    logical_to_spec,
+    shard,
+    tree_specs,
+)
+from repro.parallel.policy import sharding_policy  # noqa: F401

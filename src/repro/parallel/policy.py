@@ -1,0 +1,175 @@
+"""Sharding policy: (arch config, shape, mesh) -> AxisRules.
+
+This is where DP / TP / FSDP / EP / SP are decided. The FlowOS-RM scheduler
+calls this when it constructs a slice for a job, so the policy is a function
+of the *request* (arch + shape) and the *slice* (mesh), never hard-coded in
+model code.
+
+Logical axes used by the models:
+  batch      activation batch dim
+  seq        activation sequence dim (sharded only for long-context SP)
+  act_embed  activation d_model dim (None; Megatron-SP would map it)
+  heads      attention q-heads           -> TP when divisible
+  kv_heads   attention kv-heads          -> TP when divisible
+  kv_seq     KV-cache sequence dim       -> split-KV decode sharding
+  ff         MLP hidden                  -> TP
+  vocab      vocab dim of embed table / logits -> TP
+  embed      param d_model dim           -> FSDP axis
+  embed_tbl  embedding-table d_model dim (not FSDP-sharded; gathered often)
+  experts    MoE expert dim              -> EP
+  expert_ff  per-expert hidden
+  ssm_inner  mamba d_inner               -> TP
+  ssm_heads  mamba heads                 -> TP
+  seq_tbl    positional-embedding table rows
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.parallel.sharding import AxisRules
+
+
+def _divisible(n: int, by: int) -> bool:
+    return by > 0 and n > 0 and n % by == 0
+
+
+def sharding_policy(cfg: ModelConfig, shape: Optional[ShapeConfig],
+                    mesh: Mesh, *, fsdp: bool = True,
+                    seq_parallel: Optional[bool] = None) -> AxisRules:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    has_pod = "pod" in axes
+    data_axes = ("pod", "data") if has_pod else ("data",)
+    n_data = 1
+    for a in data_axes:
+        n_data *= axes.get(a, 1)
+    n_model = axes.get("model", 1)
+
+    batch = shape.global_batch if shape is not None else None
+    seq = shape.seq_len if shape is not None else None
+    is_decode = shape is not None and shape.is_decode
+    long_ctx = shape is not None and shape.name == "long_500k"
+    if seq_parallel is None:
+        seq_parallel = long_ctx
+
+    rules: dict = {
+        "layers": None,
+        "act_embed": None,
+        "expert_ff": None,
+        "seq_tbl": None,
+        "embed_tbl": None,
+        "seq": None,
+        "kv_seq": None,
+    }
+
+    # Is tensor parallelism available for this arch? For SSM/hybrid it is
+    # the inner/head dims; for attention archs the q-heads.
+    if cfg.family in ("ssm", "hybrid"):
+        tp_able = _divisible(cfg.ssm_heads, n_model)
+    else:
+        tp_able = _divisible(cfg.n_heads, n_model)
+
+    n_all = n_data * n_model
+
+    # ---- strategy selection (napkin-math, see DESIGN.md §5) ----
+    # TP costs ~16*B_loc*S*d wire bytes per layer (4 ring all-reduces of the
+    # activations); FSDP/pure-DP costs ~3x layer-param bytes (gather fwd,
+    # re-gather bwd under remat, reduce-scatter grads). At train_4k sizes
+    # (64k tokens per device group) activations dwarf per-layer params for
+    # every dense arch here, so pure DP wins whenever the batch can fill the
+    # whole mesh. MoE archs keep the model axis for EP (expert weights are
+    # the one thing that cannot be compute-replicated).
+    strategy = "tp"
+    if not is_decode:
+        if cfg.is_moe:
+            strategy = "dp_ep"
+        elif batch is not None and _divisible(batch, n_all):
+            strategy = "pure_dp"   # model axis joins data parallelism
+        elif tp_able:
+            strategy = "tp"
+        else:
+            # Non-TP-able heads with a batch that can't fill the mesh:
+            # replicate attention compute over the idle model axis.
+            # (seq_tp — sequence over `model` — was measured 16-60x worse
+            # on memory: the q/kv block slicing of flash attention crosses
+            # shard boundaries and GSPMD falls back to full
+            # rematerialization. See EXPERIMENTS.md §Perf iteration 9.)
+            strategy = "replicated_attn"
+
+    # ---- data parallel over batch ----
+    if strategy == "pure_dp":
+        rules["batch"] = data_axes + ("model",)
+    elif batch is not None and batch >= n_data and _divisible(batch, n_data):
+        rules["batch"] = data_axes if has_pod else "data"
+    elif batch is not None and "data" in axes and _divisible(batch, axes["data"]):
+        rules["batch"] = "data"
+    else:
+        rules["batch"] = None  # batch too small (long_500k batch=1)
+
+    # ---- sequence axis ----
+    if strategy == "seq_tp":
+        rules["seq"] = "model"
+    elif seq_parallel and rules["batch"] is None:
+        # long-context: shard activations along sequence (ring/SP style)
+        rules["seq"] = data_axes if has_pod else "data"
+
+    # ---- tensor parallel (suppressed when the model axis is consumed by
+    # pure-DP or EP; seq_tp keeps weight TP only where conflict-free).
+    # dp_ep shards attention heads over the model axis too: the expert
+    # shard_map only needs tokens replicated over `model` at its boundary,
+    # and unsharded attention at B_loc=16 was measured 16x heavier than
+    # the whole MoE (EXPERIMENTS.md §Perf iteration 3) ----
+    tp_ok = strategy in ("tp", "replicated_attn", "dp_ep")
+    rules["heads"] = ("model" if tp_ok and _divisible(cfg.n_heads, n_model)
+                      else None)
+    rules["kv_heads"] = ("model"
+                         if tp_ok and _divisible(cfg.n_kv_heads, n_model)
+                         else None)
+    rules["ff"] = ("model" if tp_ok and _divisible(cfg.d_ff, n_model)
+                   else None)
+    rules["vocab"] = "model" if strategy != "pure_dp" else None
+    rules["ssm_inner"] = ("model"
+                          if tp_ok and _divisible(cfg.d_inner, n_model)
+                          else None)
+    rules["ssm_heads"] = ("model"
+                          if tp_ok and _divisible(cfg.ssm_heads, n_model)
+                          else None)
+
+    # ---- expert parallel ----
+    rules["experts"] = ("model"
+                        if strategy in ("tp", "replicated_attn", "dp_ep")
+                        and _divisible(cfg.n_experts, n_model)
+                        else None)
+
+    # ---- LM-head sequence sharding (Megatron-SP-style loss) ----
+    rules["seq_ce"] = ("model" if strategy not in ("pure_dp",) else None)
+
+    # ---- sequence-parallel attention (shard_map): non-TP-able archs with
+    # the model axis otherwise idle for attention ----
+    rules["attn_sp"] = ("model" if strategy == "replicated_attn"
+                        and seq is not None and _divisible(seq, n_model * 512)
+                        else None)
+
+    # ---- KV-cache sharding for decode ----
+    if is_decode:
+        if rules["batch"] is None:
+            # batch=1 long-context: split KV over every axis we have
+            rules["kv_seq"] = (data_axes + ("model",) if has_pod
+                               else ("data", "model"))
+        elif rules["kv_heads"] is not None:
+            rules["kv_seq"] = None  # heads give enough parallelism
+        else:
+            rules["kv_seq"] = "model"  # flash-decode split-KV
+
+    # ---- FSDP for parameters ----
+    if fsdp:
+        rules["embed"] = (("data", "model") if strategy == "pure_dp"
+                          else "data")
+    else:
+        rules["embed"] = None
+
+    r = AxisRules(rules, mesh)
+    r.strategy = strategy
+    return r

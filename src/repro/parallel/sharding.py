@@ -1,0 +1,155 @@
+"""Logical-axis sharding (t5x-style axis rules, self-contained).
+
+Model code annotates intermediates and parameters with *logical* axis names
+("batch", "heads", "ff", ...). A policy (per arch x shape x mesh) maps the
+logical names to physical mesh axes. This indirection is what lets the same
+model definition run as DP-only, DP+TP, FSDP+TP+EP, or sequence-parallel
+long-context decode without touching the model code — the core requirement
+for FlowOS-RM slices whose shape is chosen at *job submission* time.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+class AxisRules:
+    """Mapping logical axis name -> physical mesh axis (or tuple, or None)."""
+
+    def __init__(self, rules: Dict[str, MeshAxes], mesh: Optional[Mesh] = None):
+        self.rules = dict(rules)
+        self.mesh = mesh
+
+    def physical(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        return self.rules.get(logical)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        used: list = []
+        out = []
+        for ax in logical_axes:
+            phys = self.physical(ax)
+            # a mesh axis may be used at most once per spec; later duplicate
+            # uses degrade to replication (valid, conservative)
+            if phys is None:
+                out.append(None)
+                continue
+            names = (phys,) if isinstance(phys, str) else tuple(phys)
+            names = tuple(n for n in names if n not in used)
+            used.extend(names)
+            if not names:
+                out.append(None)
+            elif len(names) == 1:
+                out.append(names[0])
+            else:
+                out.append(names)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def replace(self, **kw) -> "AxisRules":
+        r = dict(self.rules)
+        r.update(kw)
+        return AxisRules(r, self.mesh)
+
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: AxisRules):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield rules
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint expressed in logical axes.
+
+    No-op when no axis rules are active (single-device smoke tests) or when
+    the array rank disagrees (defensive for scan-carried intermediates).
+    """
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        return x
+    spec = rules.spec(logical_axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def logical_to_spec(rules: AxisRules, axes: Sequence[Optional[str]]) -> P:
+    return rules.spec(axes)
+
+
+def tree_specs(rules: AxisRules, axes_tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop mesh axes from a PartitionSpec wherever the array dim is not
+    divisible by the assigned axes' product (jit in/out shardings must
+    divide evenly; internal constraints may pad, boundaries may not)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(None if d >= len(shape) else entry)
+            continue
+        names = (entry,) if isinstance(entry, str) else list(entry)
+        names = list(names)
+        while names:
+            prod = 1
+            for n in names:
+                prod *= sizes[n]
+            if shape[d] % prod == 0:
+                break
+            names.pop()  # drop the innermost axis and retry
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(tuple(names))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sanitize_tree_specs(mesh: Mesh, specs_tree, struct_tree):
+    """Apply sanitize_spec leaf-wise (struct_tree supplies shapes)."""
+    return jax.tree.map(
+        lambda spec, struct: sanitize_spec(mesh, spec, struct.shape),
+        specs_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def tree_shardings(rules: AxisRules, axes_tree):
+    assert rules.mesh is not None
+    return jax.tree.map(
+        lambda spec: NamedSharding(rules.mesh, spec),
+        tree_specs(rules, axes_tree),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,8 @@
+from repro.train.steps import (  # noqa: F401
+    TrainState,
+    make_train_step,
+    make_serve_step,
+    make_prefill_step,
+    input_specs,
+    state_specs,
+)

@@ -1,0 +1,212 @@
+"""Train / prefill / decode step builders + ShapeDtypeStruct input specs.
+
+Every step is a pure function suitable for ``jax.jit`` with explicit
+in/out shardings derived from the active sharding policy. ``input_specs``
+returns ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+allocation) for the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.registry import Model
+from repro.optim.adamw import AdamW, OptState
+from repro.parallel.sharding import (AxisRules, axis_rules,
+                                     sanitize_tree_specs, tree_specs)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def cast_params(cfg: ModelConfig, params):
+    """One-time fp32 -> compute-dtype cast at step entry. Casting *before*
+    any use means SPMD's FSDP all-gathers move bf16, not fp32 — observed 2x
+    on every weight collective when the cast sat after the gather."""
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda p: p.astype(dt) if p.dtype == jnp.float32 else p, params)
+
+
+def make_train_step(model: Model, optimizer: AdamW, rules: AxisRules,
+                    aux_weight: float = 0.01, n_microbatches: int = 1):
+    """Training step; with n_microbatches > 1 the global batch is split on
+    the batch axis and gradients are accumulated in fp32 across a
+    lax.scan — peak activation memory scales ~1/n at unchanged collective
+    volume (grad accumulation is local)."""
+    from repro.train.losses import next_token_loss_from_hidden
+    cfg = model.cfg
+
+    def loss_and_grad(params, batch):
+        def loss_fn(p):
+            with axis_rules(rules):
+                params_c = cast_params(cfg, p)
+                hidden, aux = model.apply_hidden(cfg, params_c, batch)
+                loss = next_token_loss_from_hidden(
+                    cfg, params_c["embed"], hidden, batch["tokens"])
+            return loss + aux_weight * aux, (loss, aux)
+        return jax.grad(loss_fn, has_aux=True)(params)
+
+    def train_step(state: TrainState, batch):
+        if n_microbatches <= 1:
+            grads, (loss, aux) = loss_and_grad(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((n_microbatches,
+                                     a.shape[0] // n_microbatches)
+                                    + a.shape[1:]), batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                g, (l, a) = loss_and_grad(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = loss / n_microbatches
+            aux = aux / n_microbatches
+        with axis_rules(rules):
+            new_params, new_opt, om = optimizer.update(
+                grads, state.opt, state.params)
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, rules: AxisRules):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        with axis_rules(rules):
+            logits, _ = model.apply(cfg, cast_params(cfg, params), batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, rules: AxisRules):
+    """One decode step: (params, cache, tokens) -> (logits, new cache)."""
+    cfg = model.cfg
+
+    def serve_step(params, cache, tokens):
+        with axis_rules(rules):
+            return model.decode_step(cfg, cast_params(cfg, params), cache,
+                                     tokens)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct specs for the dry-run
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs of the model inputs for one global batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_patches, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def batch_spec_tree(cfg: ModelConfig, shape: ShapeConfig, rules: AxisRules):
+    """PartitionSpecs matching batch_struct."""
+    b = rules.spec(("batch", None))
+    out = {"tokens": b}
+    if not shape.is_decode:
+        if cfg.family == "audio":
+            out["frames"] = rules.spec(("batch", None, None))
+        if cfg.family == "vlm":
+            out["vision_embeds"] = rules.spec(("batch", None, None))
+        out["tokens"] = rules.spec(("batch", "seq"))
+    return out
+
+
+def params_struct(model: Model):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(model.init, model.cfg), jax.random.PRNGKey(0))
+
+
+def cache_struct(model: Model, shape: ShapeConfig, dtype=jnp.bfloat16):
+    assert model.init_cache is not None
+    return jax.eval_shape(
+        functools.partial(model.init_cache, model.cfg, shape.global_batch,
+                          shape.seq_len, dtype=dtype))
+
+
+def state_specs(model: Model, rules: AxisRules):
+    """(param specs, opt-state specs) as PartitionSpec pytrees."""
+    p_axes = model.param_axes(model.cfg)
+    p_specs = tree_specs(rules, p_axes)
+    opt_specs = OptState(step=P(), mu=p_specs, nu=p_specs)
+    return p_specs, opt_specs
+
+
+def cache_specs(model: Model, rules: AxisRules):
+    assert model.cache_axes is not None
+    return tree_specs(rules, model.cache_axes(model.cfg))
+
+
+def input_specs(model: Model, shape: ShapeConfig, rules: AxisRules):
+    """Everything the dry-run needs to lower a step for (arch, shape):
+
+    returns (kind, args_structs, in_shardings) where args match the step
+    function signature.
+    """
+    cfg = model.cfg
+    mesh = rules.mesh
+    as_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+    p_struct = params_struct(model)
+    p_specs, opt_specs = state_specs(model, rules)
+    p_specs = sanitize_tree_specs(mesh, p_specs, p_struct)
+    batch = batch_struct(cfg, shape)
+    b_specs = batch_spec_tree(cfg, shape, rules)
+    b_specs = sanitize_tree_specs(mesh, b_specs, batch)
+
+    if shape.kind == "train":
+        opt_struct = jax.eval_shape(
+            lambda p: AdamW().init(p), p_struct)
+        opt_specs = OptState(step=P(), mu=p_specs, nu=p_specs)
+        state = TrainState(p_struct, opt_struct)
+        state_spec = TrainState(p_specs, opt_specs)
+        return ("train", (state, batch),
+                (as_shard(state_spec), as_shard(b_specs)))
+    if shape.kind == "prefill":
+        return ("prefill", (p_struct, batch),
+                (as_shard(p_specs), as_shard(b_specs)))
+    # decode
+    c_struct = cache_struct(model, shape)
+    c_specs = cache_specs(model, rules)
+    c_specs = sanitize_tree_specs(mesh, c_specs, c_struct)
+    return ("decode", (p_struct, c_struct, batch["tokens"]),
+            (as_shard(p_specs), as_shard(c_specs),
+             as_shard(b_specs["tokens"])))

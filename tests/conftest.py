@@ -1,0 +1,6 @@
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches run on the single real CPU device; only launch/dryrun.py forces
+# 512 placeholder devices (in its own process).
+import jax
+
+jax.config.update("jax_enable_x64", False)

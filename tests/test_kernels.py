@@ -1,0 +1,206 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps + hypothesis
+property tests against the pure-jnp oracles in kernels/ref.py."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.ssd_scan import ssd_scan_fwd
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,causal,window", [
+    (1, 2, 1, 256, 64, True, None),
+    (2, 4, 2, 512, 64, True, None),
+    (2, 4, 4, 256, 128, True, None),     # MHA
+    (1, 8, 2, 512, 64, True, 128),       # GQA + sliding window
+    (2, 2, 1, 256, 64, False, None),     # bidirectional (encoder)
+])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, Hq, S, D), dtype)
+    k = rand(ks[1], (B, Hkv, S, D), dtype)
+    v = rand(ks[2], (B, Hkv, S, D), dtype)
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              bq=128, bkv=128)
+    exp = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_softcap():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = rand(ks[0], (1, 2, 256, 64))
+    k = rand(ks[1], (1, 2, 256, 64))
+    v = rand(ks[2], (1, 2, 256, 64))
+    out = flash_attention_fwd(q, k, v, causal=True, softcap=30.0,
+                              bq=128, bkv=128)
+    exp = ref.attention_ref(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hq_groups=st.integers(1, 4),
+    hkv=st.integers(1, 2),
+    nq=st.integers(1, 3),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(hq_groups, hkv, nq, causal):
+    """Property: kernel == oracle for arbitrary GQA group/blocks."""
+    B, D, bq = 1, 64, 128
+    S = bq * nq
+    Hq = hkv * hq_groups
+    ks = jax.random.split(jax.random.PRNGKey(nq * 131 + hq_groups), 3)
+    q = rand(ks[0], (B, Hq, S, D))
+    k = rand(ks[1], (B, hkv, S, D))
+    v = rand(ks[2], (B, hkv, S, D))
+    out = flash_attention_fwd(q, k, v, causal=causal, bq=bq, bkv=bq)
+    exp = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=3e-5,
+                               rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,bkv", [(512, 128), (1024, 512)])
+def test_decode_attention_sweep(T, bkv):
+    B, Hq, Hkv, D = 3, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = rand(ks[0], (B, Hq, 1, D))
+    k = rand(ks[1], (B, Hkv, T, D))
+    v = rand(ks[2], (B, Hkv, T, D))
+    kv_len = jnp.array([T // 4, T // 2, T], jnp.int32)
+    q_pos = jnp.array([T - 1], jnp.int32)
+    out = decode_attention_fwd(q, k, v, kv_len, q_pos, bkv=bkv)
+    exp = ref.attention_ref(q, k, v, causal=True, kv_len=kv_len,
+                            q_pos=q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_decode_attention_window():
+    B, Hq, Hkv, T, D = 2, 2, 1, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (B, Hq, 1, D))
+    k = rand(ks[1], (B, Hkv, T, D))
+    v = rand(ks[2], (B, Hkv, T, D))
+    kv_len = jnp.array([400, 512], jnp.int32)
+    q_pos = jnp.array([399], jnp.int32)
+    out = decode_attention_fwd(q, k, v, kv_len, q_pos, window=64, bkv=128)
+    exp = ref.attention_ref(q, k, v, causal=True, window=64, kv_len=kv_len,
+                            q_pos=q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,P,G,N,chunk", [
+    (1, 2, 128, 32, 1, 16, 32),
+    (2, 4, 256, 64, 2, 32, 64),
+    (1, 4, 128, 32, 4, 16, 128),  # single chunk
+])
+def test_ssd_scan_sweep(B, H, S, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = rand(ks[0], (B, H, S, P), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (B, H, S))).astype(jnp.float32)
+    A = -jnp.exp(rand(ks[2], (H,), scale=0.3))
+    Bm = rand(ks[3], (B, G, S, N), dtype)
+    Cm = rand(ks[4], (B, G, S, N), dtype)
+    y, state = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk)
+    ye, se = ref.ssd_ref(x, dt, A, Bm, Cm)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ye, np.float32), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(se),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=8, deadline=None)
+@given(nc=st.integers(1, 4), h=st.integers(1, 3))
+def test_ssd_state_consistency(nc, h):
+    """Property: chunked final state == sequential final state."""
+    B, P, N, chunk = 1, 16, 8, 16
+    S = chunk * nc
+    ks = jax.random.split(jax.random.PRNGKey(nc * 7 + h), 5)
+    x = rand(ks[0], (B, h, S, P))
+    dt = jax.nn.softplus(rand(ks[1], (B, h, S)))
+    A = -jnp.exp(rand(ks[2], (h,), scale=0.3))
+    Bm = rand(ks[3], (B, 1, S, N))
+    Cm = rand(ks[4], (B, 1, S, N))
+    _, state = ssd_scan_fwd(x, dt, A, Bm, Cm, chunk=chunk)
+    _, se = ref.ssd_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(se),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm / moe ffn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,D", [(8, 64), (256, 96), (1000, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(R, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = rand(ks[0], (R, D), dtype)
+    w = rand(ks[1], (D,))
+    out = ops.rmsnorm(x, w)
+    exp = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("E,C,d,f", [(2, 32, 64, 128), (4, 64, 96, 160)])
+def test_moe_ffn_sweep(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    x = rand(ks[0], (E, C, d))
+    wg = rand(ks[1], (E, d, f), scale=0.1)
+    wu = rand(ks[2], (E, d, f), scale=0.1)
+    wd = rand(ks[3], (E, f, d), scale=0.1)
+    out = ops.moe_ffn(x, wg, wu, wd)
+    exp = ref.moe_ffn_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_flash_mha_jnp_twin():
+    """The pure-jnp flash (used by the dry-run) matches the kernel oracle."""
+    from repro.models.layers import flash_mha
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, Hq, Hkv, D = 2, 1024, 4, 2, 64
+    q = rand(ks[0], (B, S, Hq, D))
+    k = rand(ks[1], (B, S, Hkv, D))
+    v = rand(ks[2], (B, S, Hkv, D))
+    out = flash_mha(q, k, v, causal=True)
+    exp = ref.attention_ref(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3),
+                            causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-5,
+                               rtol=2e-5)
