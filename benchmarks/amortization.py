@@ -8,10 +8,10 @@ from __future__ import annotations
 from repro.launch.train import load_config, run_training
 
 
-def bench():
+def bench(step_sets=(("short_job", 4), ("long_job", 60))):
     cfg = load_config("smollm-360m", smoke=True)
     rows = []
-    for name, steps in (("short_job", 4), ("long_job", 60)):
+    for name, steps in step_sets:
         out = run_training(cfg, steps=steps, batch=4, seq=64)
         b = out["breakdown"]
         total = sum(b.values())

@@ -18,7 +18,7 @@ from repro.core import DevicePool
 from repro.core.meta_accel import MetaAccelerator, StageSpec
 
 
-def bench():
+def bench(transfer_mb: int = 64, gemm_dim: int = 1024, iters: int = 10):
     pool = DevicePool.from_jax_devices(jax.devices()[:1],
                                        devices_per_node=1)
     meta = MetaAccelerator(pool)
@@ -28,27 +28,27 @@ def bench():
     stage = StageSpec(name="hop", kind=None, n_devices=1,
                       mesh_shape=(1, 1), axis_names=("data", "model"))
     slices = meta.allocate([stage])
-    x = jnp.ones((16, 1 << 20), jnp.float32)  # 64 MB
+    x = jnp.ones((16, transfer_mb << 14), jnp.float32)  # transfer_mb MB
     meta._transfer_to(slices[0], x, "warmup")
     meta.transfer_log.clear()
     meta._transfer_to(slices[0], x, "hop")
     log = meta.transfer_log[-1]
     bw = log["bytes"] / max(log["seconds"], 1e-9)
-    rows.append(("disagg/transfer_64MB", log["seconds"] * 1e6,
+    rows.append((f"disagg/transfer_{transfer_mb}MB", log["seconds"] * 1e6,
                  f"bandwidth_GBps={bw / 1e9:.2f}"))
     meta.release(slices)
 
     # (b) compute-bound op: time independent of transfer path
-    a = jnp.ones((1024, 1024), jnp.float32)
+    a = jnp.ones((gemm_dim, gemm_dim), jnp.float32)
     f = jax.jit(lambda a: a @ a)
     f(a).block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(10):
+    for _ in range(iters):
         out = f(a)
     out.block_until_ready()
-    gemm_t = (time.perf_counter() - t0) / 10
-    rows.append(("disagg/gemm_1k", gemm_t * 1e6,
-                 f"gflops={2 * 1024**3 / gemm_t / 1e9:.1f}"))
+    gemm_t = (time.perf_counter() - t0) / iters
+    rows.append((f"disagg/gemm_{gemm_dim}", gemm_t * 1e6,
+                 f"gflops={2 * gemm_dim**3 / gemm_t / 1e9:.1f}"))
     return rows
 
 

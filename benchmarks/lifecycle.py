@@ -25,10 +25,11 @@ SIM_ATTACH_PER_DEVICE = 1.2
 SIM_DETACH_PER_DEVICE = 0.9
 
 
-def bench(steps: int = 6):
+def bench(steps: int = 6, shapes=None):
     cfg = load_config("smollm-360m", smoke=True)
     rows = []
-    for name, nodes, per_node in SLICE_SHAPES:
+    for name, nodes, per_node in (shapes if shapes is not None
+                                  else SLICE_SHAPES):
         out = run_training(cfg, steps=steps, batch=4, seq=64)
         b = out["breakdown"]
         # simulated disaggregated-fabric costs on top of measured ops

@@ -1,0 +1,147 @@
+"""Control-plane scale: acquire latency + scheduler throughput vs fleet size.
+
+DxPU-scale disaggregated pools reach tens of thousands of devices; the
+seed's ``_contiguous_block`` re-sorted and double-rescanned the whole free
+list on every ``acquire`` (O(F log F) per op), and the seed scheduler
+sleep-polled at 5ms. This benchmark measures:
+
+  * steady-state acquire/release churn latency on the indexed pool at
+    1k / 10k / 100k virtual devices,
+  * the same churn through a faithful copy of the seed allocator
+    (baseline — expected >=10x slower at 10k devices),
+  * end-to-end FlowOS-RM jobs/sec for a 1000-job FIFO workload driven by
+    condition-variable wakeups (no sleep polling).
+
+``python -m benchmarks.sched_scale`` also writes BENCH_sched.json so the
+speedup is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import time
+
+from repro.core import DevicePool, FlowOSRM, JobSpec, TaskSpec
+from repro.core.pool import Lease
+
+
+class SeedDevicePool(DevicePool):
+    """The seed allocator, preserved verbatim as the benchmark baseline:
+    sort the entire free list, rescan it twice (single-pod pass, then
+    cross-pod pass) on *every* acquire. Bypasses the free-run index on
+    both acquire and release so only DeviceInfo state is used."""
+
+    def acquire(self, n, kind=None, prefer_contiguous=True):
+        with self._lock:
+            free = self.free_devices(kind)
+            if len(free) < n:
+                raise RuntimeError(
+                    f"need {n} {kind or 'any'} devices, {len(free)} free")
+            chosen = None
+            if prefer_contiguous:
+                chosen = self._seed_contiguous_block(free, n)
+            if chosen is None:
+                chosen = free[:n]
+            lease = Lease(next(self._lease_counter), chosen, kind or "any")
+            for d in chosen:
+                d.lease_id = lease.lease_id
+            self._leases[lease.lease_id] = lease
+            return lease
+
+    @staticmethod
+    def _seed_contiguous_block(free, n):
+        free_sorted = sorted(free, key=lambda d: d.uid)
+        for single_pod in (True, False):
+            run = []
+            for d in free_sorted:
+                if run and (d.uid != run[-1].uid + 1
+                            or (single_pod and d.pod != run[-1].pod)):
+                    run = []
+                run.append(d)
+                if len(run) == n:
+                    return run
+        return None
+
+    def release(self, lease):
+        with self._lock:
+            for d in lease.devices:
+                if d.lease_id == lease.lease_id:
+                    d.lease_id = None
+            self._leases.pop(lease.lease_id, None)
+
+
+def _churn_us_per_op(pool, n_devices, iters, seed=0):
+    """Fill the pool to ~50%, then time steady-state release+acquire churn
+    (the hot path of a saturated scheduler)."""
+    rng = random.Random(seed)
+    leases = []
+    target = n_devices // 2
+    held = 0
+    while held < target:
+        n = min(rng.choice([1, 2, 4, 8, 8, 16, 32]), target - held)
+        leases.append(pool.acquire(n))
+        held += n
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        lease = leases.pop(rng.randrange(len(leases)))
+        n = lease.n
+        pool.release(lease)
+        leases.append(pool.acquire(n))
+    dt = time.perf_counter() - t0
+    for lease in leases:
+        pool.release(lease)
+    return dt / (2 * iters) * 1e6  # per acquire-or-release op
+
+
+def _jobs_per_sec(n_devices, n_jobs, seed=0):
+    """1000-job FIFO workload, event-driven wakeups end to end."""
+    rng = random.Random(seed)
+    pool = DevicePool.virtual(n_devices)
+    rm = FlowOSRM(pool)
+    specs = [JobSpec(name=f"j{i}", tasks=[TaskSpec(
+        name="t", n_devices=rng.choice([1, 2, 4, 8]))])
+        for i in range(n_jobs)]
+    t0 = time.perf_counter()
+    ids = rm.submit_many(specs)
+    rm.run_until_idle(timeout_s=300.0)
+    dt = time.perf_counter() - t0
+    done = sum(1 for i in ids if rm.status(i)["status"] == "done")
+    assert done == n_jobs, f"{done}/{n_jobs} jobs done"
+    assert pool.utilization() == 0.0
+    return n_jobs / dt
+
+
+def bench(sizes=(1000, 10_000, 100_000), baseline_sizes=(1000, 10_000),
+          idx_iters=2000, seed_iters=30, n_jobs=1000, jobs_pool=1024,
+          json_path=None):
+    rows = []
+    record = {"bench": "sched_scale", "sizes": {}, "jobs": {}}
+    for n in sizes:
+        idx_us = _churn_us_per_op(DevicePool.virtual(n), n, idx_iters)
+        rows.append((f"sched_scale/acquire_indexed_{n}", f"{idx_us:.2f}",
+                     "free_run_index"))
+        cell = {"indexed_us_per_op": idx_us}
+        if n in baseline_sizes:
+            seed_us = _churn_us_per_op(SeedDevicePool.virtual(n), n,
+                                       seed_iters)
+            speedup = seed_us / max(idx_us, 1e-9)
+            rows.append((f"sched_scale/acquire_seed_{n}", f"{seed_us:.2f}",
+                         f"speedup={speedup:.1f}x"))
+            cell.update(seed_us_per_op=seed_us, speedup=speedup)
+        record["sizes"][str(n)] = cell
+    jps = _jobs_per_sec(jobs_pool, n_jobs)
+    rows.append((f"sched_scale/fifo_{n_jobs}_jobs",
+                 f"{1e6 / jps:.2f}", f"jobs_per_sec={jps:.0f}"))
+    record["jobs"] = {"n_jobs": n_jobs, "pool": jobs_pool,
+                      "jobs_per_sec": jps}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
+    for r in bench(json_path=os.path.abspath(out)):
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,3 @@
+# Repo-root conftest: its presence makes pytest prepend this directory to
+# sys.path, so `import benchmarks.*` works under a bare `pytest` invocation
+# (not only `python -m pytest`, which prepends the CWD itself).

@@ -99,7 +99,7 @@ class ElasticController:
                                       if d.node in evict)),
                     reason=f"straggler node(s) {evict}")
         if lease.n < preferred_devices:
-            extra = len(self.pool.free_devices())
+            extra = self.pool.free_count()  # O(1) from the free-run index
             grown = largest_feasible(lease.n + extra)
             if grown > lease.n and grown <= preferred_devices:
                 return ElasticDecision(

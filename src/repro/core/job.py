@@ -29,6 +29,7 @@ class TaskSpec:
     mesh_shape: Optional[Tuple[int, ...]] = None
     axis_names: Optional[Tuple[str, ...]] = None
     kind: Optional[str] = None          # accelerator kind (meta-accel)
+    prefer_contiguous: bool = True      # single-pod best-fit placement
     arch: Optional[str] = None          # model architecture id
     shape: Optional[str] = None         # input-shape cell name
     steps: int = 0                      # training steps (0 = driver-defined)

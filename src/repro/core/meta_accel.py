@@ -16,8 +16,6 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.pool import DevicePool
 from repro.core.slice import Slice
 
@@ -87,7 +85,9 @@ class MetaAccelerator:
             dst.mesh, jax.sharding.PartitionSpec())
         moved = jax.tree.map(lambda a: jax.device_put(a, target), x)
         jax.block_until_ready(moved)
-        nbytes = sum(np.asarray(a).nbytes for a in jax.tree.leaves(moved))
+        # a.nbytes reads shape/dtype metadata only; np.asarray(a) would
+        # copy every activation leaf back to the host just to count bytes
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(moved))
         self.transfer_log.append({
             "stage": stage, "bytes": int(nbytes),
             "seconds": time.perf_counter() - t0,

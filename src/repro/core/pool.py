@@ -7,15 +7,24 @@ placement policy: prefer topology-contiguous blocks (the TPU analogue of the
 paper's "attach the closest remote device through the FiC network" — slices
 spanning pods pay slower links, see DESIGN.md §2).
 
+Placement is served from an incrementally-maintained **free-run index**
+(DESIGN.md §3): sorted runs of contiguous free uids, bucketed per
+(pod, kind), updated in O(log n) on ``acquire`` / ``release`` /
+``mark_failed`` / ``mark_repaired``. Best-fit run selection (smallest run
+that satisfies the request) keeps fragmentation low; the old implementation
+re-sorted and rescanned the entire free list on every ``acquire``, which
+does not survive 100k-device fleets.
+
 Devices may be real ``jax.Device`` objects (dry-run / training) or virtual
-descriptors (scheduler-level tests and 1000+-node simulations).
+descriptors (scheduler-level tests and 100k-node simulations).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import itertools
 import threading
-from typing import Any, Dict, List, Optional, Sequence
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 
 @dataclasses.dataclass
@@ -59,6 +68,144 @@ class AllocationError(RuntimeError):
     pass
 
 
+Bucket = Tuple[int, str]   # (pod, kind)
+Run = Tuple[int, int]      # half-open uid range [start, end)
+
+
+class _FreeRunIndex:
+    """Sorted contiguous free-uid runs, bucketed per (pod, kind).
+
+    Each bucket keeps two parallel sorted lists: runs ordered by start uid
+    (for merge/split when uids enter or leave the free set) and by
+    (length, start) (for best-fit lookup). All mutations are a bisect plus
+    a couple of list inserts/deletes — O(log n) search with C-speed
+    memmoves — against the seed's full sort + rescan per acquire.
+    Per-kind free counts make feasibility checks O(1).
+    """
+
+    def __init__(self):
+        self._by_start: Dict[Bucket, List[Run]] = {}
+        self._by_len: Dict[Bucket, List[Run]] = {}   # (length, start)
+        self._kind_free: Dict[str, int] = {}
+        self._total_free = 0
+
+    # -- low-level run surgery -------------------------------------------
+    def _insert_run(self, bucket: Bucket, start: int, end: int):
+        bisect.insort(self._by_start[bucket], (start, end))
+        bisect.insort(self._by_len[bucket], (end - start, start))
+
+    def _delete_run(self, bucket: Bucket, start: int, end: int):
+        runs = self._by_start[bucket]
+        del runs[bisect.bisect_left(runs, (start, end))]
+        lens = self._by_len[bucket]
+        del lens[bisect.bisect_left(lens, (end - start, start))]
+
+    # -- mutation ---------------------------------------------------------
+    def add_range(self, bucket: Bucket, start: int, end: int):
+        """[start, end) became free: insert, merging with adjacent runs."""
+        runs = self._by_start.setdefault(bucket, [])
+        self._by_len.setdefault(bucket, [])
+        i = bisect.bisect_left(runs, (start, start))
+        merged_start, merged_end = start, end
+        if i < len(runs) and runs[i][0] == end:          # merge right
+            merged_end = runs[i][1]
+            self._delete_run(bucket, runs[i][0], runs[i][1])
+        if i > 0 and runs[i - 1][1] == start:            # merge left
+            prev = runs[i - 1]
+            merged_start = prev[0]
+            self._delete_run(bucket, prev[0], prev[1])
+        self._insert_run(bucket, merged_start, merged_end)
+        self._kind_free[bucket[1]] = (self._kind_free.get(bucket[1], 0)
+                                      + end - start)
+        self._total_free += end - start
+
+    def remove_range(self, bucket: Bucket, start: int, end: int):
+        """[start, end) became non-free; must lie within a single run."""
+        runs = self._by_start[bucket]
+        i = bisect.bisect_right(runs, (start, float("inf"))) - 1
+        rs, re = runs[i]
+        if not (rs <= start and end <= re):
+            raise AssertionError(
+                f"free-run index corrupt: [{start},{end}) not in run "
+                f"[{rs},{re}) of bucket {bucket}")
+        self._delete_run(bucket, rs, re)
+        if rs < start:
+            self._insert_run(bucket, rs, start)
+        if end < re:
+            self._insert_run(bucket, end, re)
+        self._kind_free[bucket[1]] -= end - start
+        self._total_free -= end - start
+
+    # -- queries ----------------------------------------------------------
+    def free_count(self, kind: Optional[str] = None) -> int:
+        if kind is None:
+            return self._total_free
+        return self._kind_free.get(kind, 0)
+
+    def _buckets_for(self, kind: Optional[str]) -> List[Bucket]:
+        return [b for b in self._by_start
+                if kind is None or b[1] == kind]
+
+    def best_fit(self, n: int, kind: Optional[str]) -> Optional[Run]:
+        """Smallest single-bucket run with length >= n (ties: lowest uid).
+        A single-bucket run never spans pods."""
+        best = None
+        for b in self._buckets_for(kind):
+            lens = self._by_len[b]
+            j = bisect.bisect_left(lens, (n, -1))
+            if j < len(lens) and (best is None or lens[j] < best):
+                best = lens[j]
+        if best is None:
+            return None
+        length, start = best
+        return (start, start + length)
+
+    def runs_ascending(self, kind: Optional[str]) -> List[Run]:
+        """All runs for matching kinds, ascending by start uid."""
+        out: List[Run] = []
+        for b in self._buckets_for(kind):
+            out.extend(self._by_start[b])
+        out.sort()
+        return out
+
+    def best_fit_coalesced(self, n: int, kind: Optional[str]
+                           ) -> Optional[Run]:
+        """Best-fit over runs coalesced across bucket boundaries (a
+        contiguous uid span may cross pods — the DCN-spanning fallback)."""
+        best = None
+        start = end = None
+        for rs, re in self.runs_ascending(kind) + [(None, None)]:
+            if start is not None and rs == end:
+                end = re
+                continue
+            if start is not None and end - start >= n:
+                cand = (end - start, start)
+                if best is None or cand < best:
+                    best = cand
+            start, end = rs, re
+        if best is None:
+            return None
+        length, s = best
+        return (s, s + length)
+
+    def snapshot(self) -> Dict[Bucket, List[Run]]:
+        """Copy of all buckets' runs (tests / introspection)."""
+        return {b: list(runs) for b, runs in self._by_start.items() if runs}
+
+
+def _bucket_spans(devs: Sequence[DeviceInfo]):
+    """Group an ascending-uid device list into maximal contiguous
+    same-(pod, kind) spans — one index mutation per span, not per uid."""
+    spans: List[List] = []  # [bucket, start, end]
+    for d in devs:
+        bucket = (d.pod, d.kind)
+        if spans and spans[-1][0] == bucket and spans[-1][2] == d.uid:
+            spans[-1][2] = d.uid + 1
+        else:
+            spans.append([bucket, d.uid, d.uid + 1])
+    return spans
+
+
 class DevicePool:
     """Lease accounting + contiguity-aware placement over the fleet."""
 
@@ -68,6 +215,13 @@ class DevicePool:
         self._lock = threading.RLock()
         self._lease_counter = itertools.count()
         self._leases: Dict[int, Lease] = {}
+        self._index = _FreeRunIndex()
+        self._release_listeners: List[Callable[[], None]] = []
+        free = sorted((d for d in self._devices
+                       if d.healthy and d.lease_id is None),
+                      key=lambda d: d.uid)
+        for bucket, start, end in _bucket_spans(free):
+            self._index.add_range(bucket, start, end)
 
     # -- constructors ----------------------------------------------------
     @classmethod
@@ -94,6 +248,23 @@ class DevicePool:
                                     pod=i // devices_per_pod, kind=kind))
         return cls(infos)
 
+    # -- event hooks ------------------------------------------------------
+    def add_release_listener(self, fn: Callable[[], None]):
+        """``fn()`` runs (outside the pool lock) whenever capacity returns
+        to the pool — lease release or device repair. FlowOS-RM hooks its
+        scheduler wakeup here (DESIGN.md §4)."""
+        with self._lock:
+            self._release_listeners.append(fn)
+
+    def remove_release_listener(self, fn: Callable[[], None]):
+        with self._lock:
+            if fn in self._release_listeners:
+                self._release_listeners.remove(fn)
+
+    def _notify_release(self):
+        for fn in list(self._release_listeners):
+            fn()
+
     # -- queries ----------------------------------------------------------
     @property
     def size(self) -> int:
@@ -105,11 +276,22 @@ class DevicePool:
                     if d.healthy and d.lease_id is None
                     and (kind is None or d.kind == kind)]
 
+    def free_count(self, kind: Optional[str] = None) -> int:
+        """O(1) free-device count from the index (no fleet scan)."""
+        with self._lock:
+            return self._index.free_count(kind)
+
+    def free_runs(self) -> Dict[Bucket, List[Run]]:
+        """Free-run index snapshot: {(pod, kind): [(start, end), ...]}."""
+        with self._lock:
+            return self._index.snapshot()
+
     def utilization(self) -> float:
         with self._lock:
-            healthy = [d for d in self._devices if d.healthy]
-            leased = [d for d in healthy if d.lease_id is not None]
-            return len(leased) / max(len(healthy), 1)
+            healthy = sum(1 for d in self._devices if d.healthy)
+            leased = sum(1 for d in self._devices
+                         if d.healthy and d.lease_id is not None)
+            return leased / max(healthy, 1)
 
     def leases(self) -> List[Lease]:
         with self._lock:
@@ -117,62 +299,102 @@ class DevicePool:
 
     # -- allocation --------------------------------------------------------
     def can_allocate(self, n: int, kind: Optional[str] = None) -> bool:
-        return len(self.free_devices(kind)) >= n
+        return self.free_count(kind) >= n
+
+    def can_allocate_many(self, need: Dict[Optional[str], int]) -> bool:
+        """Feasibility for a co-allocation request ({kind: n}) in one lock
+        round-trip — what FlowOS-RM asks before dispatching a job.
+
+        Exact for mixed requests: each named kind must be covered by its
+        own free devices, and the kind-agnostic (None) demand by whatever
+        remains, i.e. total free >= total demand. (The seed checked each
+        kind independently, double-counting devices when a job mixed
+        kind=None with a named kind.)"""
+        with self._lock:
+            total = 0
+            for k, n in need.items():
+                total += n
+                if k is not None and self._index.free_count(k) < n:
+                    return False
+            return self._index.free_count(None) >= total
 
     def acquire(self, n: int, kind: Optional[str] = None,
                 prefer_contiguous: bool = True) -> Lease:
         """attach-device: lease n devices, preferring a contiguous block
         within one pod (lowest-latency ICI placement)."""
         with self._lock:
-            free = self.free_devices(kind)
-            if len(free) < n:
+            free_n = self._index.free_count(kind)
+            if free_n < n:
                 raise AllocationError(
-                    f"need {n} {kind or 'any'} devices, {len(free)} free")
-            chosen: Optional[List[DeviceInfo]] = None
-            if prefer_contiguous:
-                chosen = self._contiguous_block(free, n)
-            if chosen is None:
-                chosen = free[:n]  # fragmented fallback (may span pods)
+                    f"need {n} {kind or 'any'} devices, {free_n} free")
+            uids: Optional[List[int]] = None
+            if prefer_contiguous and n > 0:
+                run = self._index.best_fit(n, kind)
+                if run is None:
+                    run = self._index.best_fit_coalesced(n, kind)
+                if run is not None:
+                    uids = list(range(run[0], run[0] + n))
+            if uids is None:
+                uids = self._first_free_uids(n, kind)
+            chosen = [self._by_uid[u] for u in uids]
             lease = Lease(next(self._lease_counter), chosen,
                           kind or "any")
             for d in chosen:
                 d.lease_id = lease.lease_id
+            for bucket, start, end in _bucket_spans(chosen):
+                self._index.remove_range(bucket, start, end)
             self._leases[lease.lease_id] = lease
             return lease
 
-    def _contiguous_block(self, free: List[DeviceInfo],
-                          n: int) -> Optional[List[DeviceInfo]]:
-        """First contiguous uid-run of length n, preferring single-pod."""
-        free_sorted = sorted(free, key=lambda d: d.uid)
-        for single_pod in (True, False):
-            run: List[DeviceInfo] = []
-            for d in free_sorted:
-                if run and (d.uid != run[-1].uid + 1
-                            or (single_pod and d.pod != run[-1].pod)):
-                    run = []
-                run.append(d)
-                if len(run) == n:
-                    return run
-        return None
+    def _first_free_uids(self, n: int, kind: Optional[str]) -> List[int]:
+        """Fragmented fallback: lowest n free uids (may span pods/runs)."""
+        uids: List[int] = []
+        for rs, re in self._index.runs_ascending(kind):
+            take = min(n - len(uids), re - rs)
+            uids.extend(range(rs, rs + take))
+            if len(uids) == n:
+                break
+        return uids
 
     def release(self, lease: Lease):
         """detach-device: return devices to the pool."""
         with self._lock:
+            back = []
             for d in lease.devices:
                 if d.lease_id == lease.lease_id:
                     d.lease_id = None
+                    if d.healthy:
+                        back.append(d)
+            back.sort(key=lambda d: d.uid)
+            for bucket, start, end in _bucket_spans(back):
+                self._index.add_range(bucket, start, end)
             self._leases.pop(lease.lease_id, None)
+        self._notify_release()
 
     # -- failures ----------------------------------------------------------
     def mark_failed(self, uids: Sequence[int]):
         with self._lock:
             for uid in uids:
-                self._by_uid[uid].healthy = False
+                d = self._by_uid[uid]
+                if d.healthy:
+                    d.healthy = False
+                    if d.lease_id is None:
+                        self._index.remove_range((d.pod, d.kind),
+                                                 uid, uid + 1)
 
     def mark_repaired(self, uids: Sequence[int]):
+        repaired = False
         with self._lock:
             for uid in uids:
-                self._by_uid[uid].healthy = True
+                d = self._by_uid[uid]
+                if not d.healthy:
+                    d.healthy = True
+                    if d.lease_id is None:
+                        self._index.add_range((d.pod, d.kind),
+                                              d.uid, d.uid + 1)
+                        repaired = True
+        if repaired:
+            self._notify_release()
 
     def failed_in_lease(self, lease: Lease) -> List[DeviceInfo]:
         with self._lock:

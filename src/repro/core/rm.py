@@ -4,7 +4,14 @@ Cooperates with a cluster-RM-shaped execution layer (thread-per-job here,
 Mesos in the paper — the contract is identical: co-allocate, then launch
 tasks on slice members). Scheduling is FIFO (paper Fig. 5) with optional
 backfill; every allocation goes through the DevicePool's contiguity-aware
-placement.
+placement (free-run index, DESIGN.md §3).
+
+The control loop is **event-driven** (DESIGN.md §4): a ``threading.Condition``
+is notified on job submission, job completion, cancellation, and pool
+capacity return (via ``DevicePool.add_release_listener``), so
+``run_until_idle`` / ``wait`` block on condition-variable wakeups instead of
+sleep-polling — at thousands of jobs the 5ms poll of the seed implementation
+dominates scheduler latency.
 
 The event log (time, job, phase) is what benchmarks/sharing.py renders into
 the Fig. 5 reproduction.
@@ -14,11 +21,13 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional
 
 from repro.core.job import JobRecord, JobSpec, JobStatus, TaskSpec
 from repro.core.pool import AllocationError, DevicePool
 from repro.core.slice import Slice
+
+_TERMINAL = (JobStatus.DONE, JobStatus.FAILED, JobStatus.CANCELLED)
 
 
 class FlowOSRM:
@@ -28,22 +37,63 @@ class FlowOSRM:
         self.backfill = backfill
         self.simulate_boot_s = simulate_boot_s
         self._lock = threading.RLock()
+        # Wakeup channel for run_until_idle/wait. Deliberately NOT tied to
+        # self._lock: _wakeup is invoked from DevicePool's release fan-out,
+        # where the calling thread may hold *another* RM's lock (shared
+        # pool, several RMs). The wake lock is a leaf — nothing is acquired
+        # while holding it — so the fan-out can never form a lock cycle.
+        # _wake_seq makes the check-then-wait race-free: every event bumps
+        # it, and waiters only sleep if it is unchanged since before their
+        # state check.
+        self._wake_cond = threading.Condition(threading.Lock())
+        self._wake_seq = 0
         self._job_counter = itertools.count(1)
         self._queue: List[JobRecord] = []
         self._jobs: Dict[int, JobRecord] = {}
         self._threads: Dict[int, threading.Thread] = {}
         self.events: List[tuple] = []
         self._t0 = time.perf_counter()
+        # capacity returning to the pool (lease release / repair) is a
+        # scheduling event: wake any thread blocked in run_until_idle/wait
+        pool.add_release_listener(self._wakeup)
+
+    def _wakeup(self):
+        with self._wake_cond:
+            self._wake_seq += 1
+            self._wake_cond.notify_all()
+
+    def close(self):
+        """Unregister from the pool. An RM that is not closed stays
+        referenced by the pool's listener list for the pool's lifetime —
+        call this (or use the RM as a context manager) when creating many
+        RMs against one long-lived pool."""
+        self.pool.remove_release_listener(self._wakeup)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- REST-like API ----------------------------------------------------
     def submit(self, spec: JobSpec) -> int:
+        return self.submit_many([spec])[0]
+
+    def submit_many(self, specs: Iterable[JobSpec]) -> List[int]:
+        """Batch submission: one lock round-trip and one scheduler wakeup
+        for the whole batch (amortizes lock traffic for 1000-job loads)."""
         with self._lock:
-            rec = JobRecord(job_id=next(self._job_counter), spec=spec,
-                            submit_time=self._now())
-            self._queue.append(rec)
-            self._jobs[rec.job_id] = rec
-            self._log(rec, "submitted")
-            return rec.job_id
+            ids = []
+            for spec in specs:
+                rec = JobRecord(job_id=next(self._job_counter), spec=spec,
+                                submit_time=self._now())
+                self._queue.append(rec)
+                self._jobs[rec.job_id] = rec
+                self._log(rec, "submitted")
+                ids.append(rec.job_id)
+        self._wakeup()
+        return ids
 
     def submit_dict(self, d: dict) -> int:
         return self.submit(JobSpec.from_dict(d))
@@ -59,8 +109,12 @@ class FlowOSRM:
                 self._queue.remove(rec)
                 rec.status = JobStatus.CANCELLED
                 self._log(rec, "cancelled")
-                return True
-            return False
+                cancelled = True
+            else:
+                cancelled = False
+        if cancelled:
+            self._wakeup()
+        return cancelled
 
     def pool_utilization(self) -> float:
         return self.pool.utilization()
@@ -82,12 +136,13 @@ class FlowOSRM:
         with self._lock:
             if rec.status != JobStatus.QUEUED:
                 return False
-            need = {}
+            need: Dict[Optional[str], int] = {}
             for t in rec.spec.tasks:
                 need[t.kind] = need.get(t.kind, 0) + t.n_devices
-            for kind, n in need.items():
-                if not self.pool.can_allocate(n, kind):
-                    return False
+            # one O(#kinds) feasibility check against the free-run index
+            # (the seed re-filtered the whole fleet once per kind)
+            if not self.pool.can_allocate_many(need):
+                return False
             rec.status = JobStatus.ALLOCATING
             self._queue.remove(rec)
             slices = []
@@ -96,7 +151,8 @@ class FlowOSRM:
                     s = Slice(name=f"{rec.spec.name}/{t.name}",
                               pool=self.pool, n_devices=t.n_devices,
                               mesh_shape=t.mesh_shape,
-                              axis_names=t.axis_names, kind=t.kind)
+                              axis_names=t.axis_names, kind=t.kind,
+                              prefer_contiguous=t.prefer_contiguous)
                     s.attach_device()
                     slices.append(s)
             except AllocationError:
@@ -140,34 +196,64 @@ class FlowOSRM:
         finally:
             rec.end_time = self._now()
             self._log(rec, rec.status.value)
+            self._wakeup()
 
     # -- drive to completion -----------------------------------------------
-    def run_until_idle(self, poll_s: float = 0.005, timeout_s: float = 600.0):
+    def _busy(self) -> bool:
+        return bool(self._queue) or any(
+            r.status in (JobStatus.RUNNING, JobStatus.ALLOCATING)
+            for r in self._jobs.values())
+
+    def run_until_idle(self, poll_s: Optional[float] = None,
+                       timeout_s: float = 600.0):
+        """Schedule until the queue drains and all jobs finish.
+
+        Event-driven: blocks on the scheduler condition between passes —
+        woken by submissions, completions, and pool releases. ``poll_s`` is
+        kept for API compatibility; it no longer drives a sleep loop.
+        """
+        del poll_s  # legacy polling interval — wakeups are event-driven now
         deadline = time.perf_counter() + timeout_s
-        while time.perf_counter() < deadline:
+        while True:
+            with self._wake_cond:
+                seq = self._wake_seq
             self.schedule_once()
             with self._lock:
-                busy = bool(self._queue) or any(
-                    r.status in (JobStatus.RUNNING, JobStatus.ALLOCATING)
-                    for r in self._jobs.values())
+                busy = self._busy()
             if not busy:
                 return
-            time.sleep(poll_s)
-        raise TimeoutError("jobs did not finish before timeout")
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                raise TimeoutError("jobs did not finish before timeout")
+            with self._wake_cond:
+                # an event between the seq snapshot and here bumped the
+                # counter — skip the wait and re-check instead of sleeping
+                if self._wake_seq == seq:
+                    self._wake_cond.wait(remaining)
 
     def wait(self, job_id: int, timeout_s: float = 600.0) -> JobRecord:
         deadline = time.perf_counter() + timeout_s
-        while time.perf_counter() < deadline:
+        while True:
+            with self._wake_cond:
+                seq = self._wake_seq
             self.schedule_once()
-            rec = self._jobs[job_id]
-            if rec.status in (JobStatus.DONE, JobStatus.FAILED,
-                              JobStatus.CANCELLED):
+            with self._lock:
+                rec = self._jobs[job_id]
+                done = rec.status in _TERMINAL
                 th = self._threads.get(job_id)
-                if th is not None:
-                    th.join(timeout=timeout_s)
-                return rec
-            time.sleep(0.005)
-        raise TimeoutError(f"job {job_id} did not finish")
+            if done:
+                break
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                raise TimeoutError(f"job {job_id} did not finish")
+            with self._wake_cond:
+                if self._wake_seq == seq:
+                    self._wake_cond.wait(remaining)
+        # join with the *remaining* deadline budget — not the full timeout
+        # again — so wait() blocks at most ~timeout_s in total
+        if th is not None:
+            th.join(timeout=max(0.0, deadline - time.perf_counter()))
+        return rec
 
     # -- internals -----------------------------------------------------------
     def _now(self) -> float:

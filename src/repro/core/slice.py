@@ -58,6 +58,7 @@ class Slice:
     mesh_shape: Optional[Tuple[int, ...]] = None
     axis_names: Optional[Tuple[str, ...]] = None
     kind: Optional[str] = None
+    prefer_contiguous: bool = True   # pod-local best-fit vs scatter
 
     state: SliceState = SliceState.CREATED
     lease: Optional[Lease] = None
@@ -86,7 +87,9 @@ class Slice:
     def attach_device(self):
         """Lease accelerators (paper: PCIe-over-Ethernet attach)."""
         def fn():
-            self.lease = self.pool.acquire(self.n_devices, kind=self.kind)
+            self.lease = self.pool.acquire(
+                self.n_devices, kind=self.kind,
+                prefer_contiguous=self.prefer_contiguous)
         return self._transition("attach_device", fn)
 
     def launch_machine(self, simulate_boot_s: float = 0.0):

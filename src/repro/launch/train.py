@@ -126,8 +126,11 @@ def run_training(cfg, *, steps: int, batch: int, seq: int,
         name="train", n_devices=n_dev, mesh_shape=tuple(mesh_shape),
         axis_names=("data", "model"), arch=cfg.name, steps=steps,
         prepare_fn=prepare, task_fn=task)])
-    job_id = rm.submit(spec)
-    rec = rm.wait(job_id, timeout_s=3600)
+    try:
+        job_id = rm.submit(spec)
+        rec = rm.wait(job_id, timeout_s=3600)
+    finally:
+        rm.close()  # callers may pass a long-lived pool; drop our listener
     if rec.error:
         raise RuntimeError(rec.error)
     breakdown = rec.slices[0].breakdown() if rec.slices else {}

@@ -692,12 +692,30 @@ def _moe_inner_dsharded(cfg: ModelConfig, xt, router, wg, wu, wd,
     return out, aux
 
 
+_SHARD_MAP_NO_CHECK_KW = None
+
+
+def _shard_map_no_check_kw(shard_map):
+    """Cached: pre-0.5 jax spells shard_map's check_vma kwarg check_rep."""
+    global _SHARD_MAP_NO_CHECK_KW
+    if _SHARD_MAP_NO_CHECK_KW is None:
+        import inspect
+        _SHARD_MAP_NO_CHECK_KW = (
+            "check_vma"
+            if "check_vma" in inspect.signature(shard_map).parameters
+            else "check_rep")
+    return _SHARD_MAP_NO_CHECK_KW
+
+
 def moe(params, cfg: ModelConfig, x):
     """Top-k MoE. Returns (out, aux_loss). Expert-parallel when a mesh with a
     `model` axis is active; pure local otherwise."""
     from repro.parallel.sharding import current_rules
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # moved out of jax.experimental in newer jax
+        from jax.experimental.shard_map import shard_map
 
     B, S, d = x.shape
     E, k = cfg.n_experts, cfg.top_k
@@ -755,6 +773,7 @@ def moe(params, cfg: ModelConfig, x):
         aux = jax.lax.pmean(aux, batch_names) if batch_names else aux
         return out.reshape(b, s, dd), aux
 
+    no_check = _shard_map_no_check_kw(shard_map)
     fn = shard_map(
         sharded_moe, mesh=mesh,
         in_specs=(x_spec, P(None, None),
@@ -762,7 +781,7 @@ def moe(params, cfg: ModelConfig, x):
                   P(ep_axis, fsdp_axis, None) if fsdp_axis else P(ep_axis, None, None),
                   P(ep_axis, None, fsdp_axis) if fsdp_axis else P(ep_axis, None, None)),
         out_specs=(x_spec, P()),
-        check_vma=False)
+        **{no_check: False})
     del w_spec
     out, aux = fn(x, params["router"], params["wg"], params["wu"],
                   params["wd"])

@@ -1,0 +1,39 @@
+"""Fallback shim for the optional `hypothesis` dependency.
+
+When hypothesis is installed the test modules import it directly; when it
+is missing they fall back to this shim, so the *property* tests skip
+cleanly while every plain test in the same module still runs (the seed
+hard-imported hypothesis and the whole module failed collection).
+"""
+import pytest
+
+
+class _AnyStrategy:
+    """Stands in for any `strategies.*` expression built at decoration
+    time (`st.integers(1, 4)`, `st.lists(st.floats(...))`, ...)."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def given(*args, **kwargs):
+    """Replace the test body with a zero-arg skipper (a wrapper keeping the
+    original signature would make pytest hunt for fixtures named after the
+    hypothesis parameters)."""
+    def deco(fn):
+        def skipper():
+            pytest.skip("hypothesis not installed (property test)")
+        skipper.__name__ = fn.__name__
+        skipper.__doc__ = fn.__doc__
+        return skipper
+    return deco
+
+
+def settings(*args, **kwargs):
+    return lambda fn: fn

@@ -1,6 +1,7 @@
 """FlowOS-RM core behaviour: pool allocation, slice lifecycle, FIFO
 scheduling + resource sharing (paper Fig. 5), failures, elasticity, and the
 meta-accelerator."""
+import threading
 import time
 
 import pytest
@@ -161,6 +162,48 @@ def test_rest_like_dict_roundtrip():
     job_id = rm.submit_dict(d)
     rec = rm.wait(job_id)
     assert rec.status.value == "done"
+
+
+def test_submit_many_batch():
+    pool = DevicePool.virtual(32)
+    rm = FlowOSRM(pool)
+    ids = rm.submit_many(_job(f"j{i}", 4, 0.005) for i in range(12))
+    assert ids == list(range(1, 13))
+    rm.run_until_idle()
+    assert all(rm.status(i)["status"] == "done" for i in ids)
+    assert pool.utilization() == 0.0
+
+
+def test_two_rms_share_pool_no_deadlock():
+    """Two RMs over one pool, racing for the same capacity with multi-task
+    jobs: the AllocationError rollback releases capacity while holding an
+    RM lock, whose fan-out wakes the *other* RM — must not deadlock, and
+    each RM must be woken by the other's releases (not just its own)."""
+    pool = DevicePool.virtual(8)
+    rms = [FlowOSRM(pool), FlowOSRM(pool)]
+
+    def drive(rm, tag):
+        specs = [JobSpec(name=f"{tag}{i}", tasks=[
+            TaskSpec(name="a", n_devices=3,
+                     task_fn=lambda s: time.sleep(0.001)),
+            TaskSpec(name="b", n_devices=3,
+                     task_fn=lambda s: time.sleep(0.001)),
+        ]) for i in range(15)]
+        rm.submit_many(specs)
+        rm.run_until_idle(timeout_s=60)
+
+    threads = [threading.Thread(target=drive, args=(rm, tag), daemon=True)
+               for rm, tag in zip(rms, "AB")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=90)
+    assert not any(t.is_alive() for t in threads), "cross-RM deadlock"
+    for rm in rms:
+        assert all(r.status.value == "done" for r in rm._jobs.values())
+        rm.close()
+    assert pool.utilization() == 0.0
+    assert pool._release_listeners == []
 
 
 # ---------------------------------------------------------------------------

@@ -6,7 +6,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: skip property tests, run the rest
+    from hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd

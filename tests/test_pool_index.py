@@ -1,0 +1,171 @@
+"""Free-run index invariants (DESIGN.md §3).
+
+Plain-pytest property loop (no hypothesis needed): drive the pool through
+randomized acquire / release / mark_failed / mark_repaired sequences and
+check, after every operation, that the incrementally-maintained index is
+byte-identical to a brute-force recomputation from device state — and that
+best-fit placement never spans pods when a single-pod run could serve the
+request.
+"""
+import random
+
+import pytest
+
+from repro.core.pool import AllocationError, DevicePool
+
+
+def brute_force_runs(pool):
+    """Recompute {(pod, kind): [(start, end), ...]} from device state."""
+    by_bucket = {}
+    for d in sorted(pool.free_devices(), key=lambda d: d.uid):
+        by_bucket.setdefault((d.pod, d.kind), []).append(d.uid)
+    runs = {}
+    for bucket, uids in by_bucket.items():
+        out = []
+        start = prev = uids[0]
+        for u in uids[1:]:
+            if u != prev + 1:
+                out.append((start, prev + 1))
+                start = u
+            prev = u
+        out.append((start, prev + 1))
+        runs[bucket] = out
+    return runs
+
+
+def brute_force_counts(pool):
+    counts = {}
+    for d in pool.free_devices():
+        counts[d.kind] = counts.get(d.kind, 0) + 1
+    return counts
+
+
+def single_pod_run_exists(pool, n, kind):
+    return any(end - start >= n
+               for (pod, k), runs in brute_force_runs(pool).items()
+               if kind is None or k == kind
+               for start, end in runs)
+
+
+def check_index(pool):
+    assert pool.free_runs() == brute_force_runs(pool)
+    counts = brute_force_counts(pool)
+    assert pool.free_count() == sum(counts.values())
+    for kind in ("tpu", "gpu", "fpga"):
+        assert pool.free_count(kind) == counts.get(kind, 0)
+
+
+def make_pool(rng):
+    n = rng.choice([16, 32, 48, 64])
+    kinds = {}
+    if rng.random() < 0.5:  # heterogeneous fleet: three kind bands
+        a, b = sorted(rng.sample(range(1, n), 2))
+        kinds = {(0, a): "tpu", (a, b): "gpu", (b, n): "fpga"}
+    return DevicePool.virtual(
+        n, devices_per_node=rng.choice([2, 4]),
+        devices_per_pod=rng.choice([8, 16, 256]), kinds=kinds)
+
+
+@pytest.mark.parametrize("seed", range(500))
+def test_index_matches_brute_force(seed):
+    rng = random.Random(seed)
+    pool = make_pool(rng)
+    leases = []
+    check_index(pool)
+    for _ in range(30):
+        op = rng.choice(["acquire", "acquire", "release", "fail", "repair"])
+        if op == "acquire":
+            kind = rng.choice([None, "tpu", "gpu", "fpga"])
+            n = rng.randint(1, max(pool.free_count(kind), 1))
+            try:
+                leases.append(pool.acquire(
+                    n, kind=kind,
+                    prefer_contiguous=rng.random() < 0.8))
+            except AllocationError:
+                assert pool.free_count(kind) < n
+        elif op == "release" and leases:
+            pool.release(leases.pop(rng.randrange(len(leases))))
+        elif op == "fail":
+            uids = rng.sample(range(pool.size),
+                              rng.randint(1, max(pool.size // 8, 1)))
+            pool.mark_failed(uids)
+        elif op == "repair":
+            uids = rng.sample(range(pool.size),
+                              rng.randint(1, max(pool.size // 8, 1)))
+            pool.mark_repaired(uids)
+        check_index(pool)
+    for lease in leases:  # drain: everything must merge back into runs
+        pool.release(lease)
+        check_index(pool)
+
+
+@pytest.mark.parametrize("seed", range(120))
+def test_best_fit_stays_single_pod_when_possible(seed):
+    """If any single-(pod, kind) run can serve the request, the chosen
+    placement must not span pods."""
+    rng = random.Random(10_000 + seed)
+    pool = make_pool(rng)
+    leases = []
+    for _ in range(25):
+        if leases and rng.random() < 0.4:
+            pool.release(leases.pop(rng.randrange(len(leases))))
+            continue
+        kind = rng.choice([None, "tpu", "gpu"])
+        free = pool.free_count(kind)
+        if free == 0:
+            continue
+        n = rng.randint(1, free)
+        had_single_pod_run = single_pod_run_exists(pool, n, kind)
+        lease = pool.acquire(n, kind=kind)
+        leases.append(lease)
+        if had_single_pod_run:
+            assert not lease.cross_pod, (
+                f"seed={seed}: best-fit spanned pods for n={n} "
+                f"kind={kind} despite a single-pod run")
+            uids = sorted(d.uid for d in lease.devices)
+            assert uids == list(range(uids[0], uids[0] + n)), (
+                "single-pod placement must be uid-contiguous")
+
+
+def test_index_after_failed_device_in_lease():
+    """A device failing while leased must not re-enter the free index on
+    release; repairing it afterwards must."""
+    pool = DevicePool.virtual(16, devices_per_pod=8)
+    lease = pool.acquire(8)
+    dead = lease.devices[3].uid
+    pool.mark_failed([dead])
+    check_index(pool)
+    pool.release(lease)
+    check_index(pool)
+    assert pool.free_count() == 15
+    pool.mark_repaired([dead])
+    check_index(pool)
+    assert pool.free_count() == 16
+    assert pool.free_runs() == {(0, "tpu"): [(0, 8)], (1, "tpu"): [(8, 16)]}
+
+
+def test_can_allocate_many_mixed_kind_exact():
+    """kind=None demand must come out of the *leftover* after named kinds,
+    not double-count the same devices."""
+    pool = DevicePool.virtual(4, kinds={(0, 4): "gpu"})
+    assert pool.can_allocate_many({"gpu": 4})
+    assert not pool.can_allocate_many({None: 4, "gpu": 4})  # 8 > 4 free
+    pool2 = DevicePool.virtual(8, kinds={(0, 4): "gpu", (4, 8): "tpu"})
+    assert pool2.can_allocate_many({"gpu": 4, None: 4})
+    assert not pool2.can_allocate_many({"gpu": 4, None: 5})
+    lease = pool2.acquire(4, kind="tpu")
+    assert pool2.can_allocate_many({"gpu": 4})
+    assert not pool2.can_allocate_many({"gpu": 4, None: 1})
+    pool2.release(lease)
+    assert pool2.can_allocate_many({"gpu": 4, None: 4})
+
+
+def test_mark_failed_is_idempotent():
+    pool = DevicePool.virtual(8)
+    pool.mark_failed([2, 2, 3])
+    pool.mark_failed([2])
+    check_index(pool)
+    pool.mark_repaired([2, 2])
+    pool.mark_repaired([2, 3])
+    check_index(pool)
+    assert pool.free_count() == 8

@@ -7,7 +7,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: skip property tests, run the rest
+    from hypothesis_compat import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import SyntheticLMDataset, make_data_iterator
