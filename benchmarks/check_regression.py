@@ -1,0 +1,130 @@
+"""CI gate: fail when a fresh benchmark run regresses more than ``slack``x
+against the committed BENCH_*.json records.
+
+Gated rows (only metrics present in both the committed record and the
+fresh run are compared — a machine that skips a size is not a failure):
+
+  sched/acquire_<n>        BENCH_sched.json    sizes[n].indexed_us_per_op
+                           (lower is better)
+  pipeline/overlap_<cfg>   BENCH_pipeline.json sweep[cfg].speedup
+                           (higher is better; k=1 baselines not gated)
+
+The default slack factor of 2x absorbs machine-to-machine variance while
+still catching the failure modes that matter: an accidental O(n) rescan
+creeping back into the allocator, or the pipelined data plane silently
+degrading to serial.
+
+  python -m benchmarks.check_regression [--slack 2.0]
+
+Exit status 1 on any gated regression. ``run_gate`` is the library entry
+(tests/test_bench_smoke.py smoke-invokes it with tiny sweep configs)."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import Dict, List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+COMMITTED = ("BENCH_sched.json", "BENCH_pipeline.json")
+
+Metric = Tuple[float, str]  # (value, "lower"|"higher" is better)
+
+
+def extract_metrics(record: dict) -> Dict[str, Metric]:
+    """Flatten a BENCH_*.json record into gateable {name: (value, dir)}."""
+    out: Dict[str, Metric] = {}
+    if record.get("bench") == "sched_scale":
+        for n, cell in record.get("sizes", {}).items():
+            if "indexed_us_per_op" in cell:
+                out[f"sched/acquire_{n}"] = (cell["indexed_us_per_op"],
+                                             "lower")
+    if record.get("bench") == "pipeline_overlap":
+        for cfg, cell in record.get("sweep", {}).items():
+            if "speedup" in cell:
+                out[f"pipeline/overlap_{cfg}"] = (cell["speedup"], "higher")
+    return out
+
+
+def load_committed(root: str = ROOT) -> Dict[str, Metric]:
+    out: Dict[str, Metric] = {}
+    for name in COMMITTED:
+        path = os.path.join(root, name)
+        if os.path.exists(path):
+            with open(path) as f:
+                out.update(extract_metrics(json.load(f)))
+    return out
+
+
+def compare(fresh: Dict[str, Metric], committed: Dict[str, Metric],
+            slack: float = 2.0) -> List[str]:
+    """Failure strings for every gated metric worse than slack x committed."""
+    fails = []
+    for name, (cval, direction) in sorted(committed.items()):
+        if name not in fresh or cval <= 0:
+            continue
+        fval = fresh[name][0]
+        if direction == "lower" and fval > cval * slack:
+            fails.append(f"{name}: {fval:.2f} > {slack:g}x committed "
+                         f"{cval:.2f}")
+        elif direction == "higher" and fval < cval / slack:
+            fails.append(f"{name}: {fval:.2f} < committed {cval:.2f} / "
+                         f"{slack:g}")
+    return fails
+
+
+def run_gate(slack: float = 2.0, sched_kwargs: dict = None,
+             pipe_kwargs: dict = None, root: str = ROOT) -> List[str]:
+    """Run the gated benchmarks fresh (into temp files — the committed
+    records are never touched) and compare. Returns failure strings."""
+    from benchmarks import pipeline_overlap, sched_scale
+
+    committed = load_committed(root)
+    sched_kwargs = dict(sched_kwargs if sched_kwargs is not None else
+                        # indexed rows only: the seed baseline re-run and
+                        # the 100k sweep are figure material, not a gate
+                        dict(sizes=(1000, 10_000), baseline_sizes=(),
+                             n_jobs=100, jobs_pool=256))
+    pipe_kwargs = dict(pipe_kwargs if pipe_kwargs is not None else
+                       dict(stage_counts=(4,), microbatches=(1, 8)))
+    fresh: Dict[str, Metric] = {}
+    with tempfile.TemporaryDirectory() as td:
+        for mod, kwargs, fname in (
+                (sched_scale, sched_kwargs, "sched.json"),
+                (pipeline_overlap, pipe_kwargs, "pipe.json")):
+            path = os.path.join(td, fname)
+            mod.bench(json_path=path, **kwargs)
+            with open(path) as f:
+                fresh.update(extract_metrics(json.load(f)))
+    # a gate that gates nothing is a broken gate, not a green one: the
+    # committed records must parse to gated rows, and the fresh run must
+    # overlap them
+    if not committed:
+        return [f"no gated rows in committed records ({COMMITTED} "
+                f"missing or schema drifted under {root})"]
+    if not set(fresh) & set(committed):
+        return ["gate extracted 0 overlapping rows: fresh run produced "
+                f"{sorted(fresh) or 'nothing'}, committed records have "
+                f"{sorted(committed)} — record keys drifted?"]
+    return compare(fresh, committed, slack)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--slack", type=float, default=2.0,
+                    help="allowed regression factor (default 2.0)")
+    args = ap.parse_args(argv)
+    fails = run_gate(slack=args.slack)
+    if fails:
+        for f in fails:
+            print(f"REGRESSION {f}")
+        return 1
+    print(f"check_regression: all gated rows within {args.slack:g}x "
+          "of committed records")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

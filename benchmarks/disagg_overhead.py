@@ -29,10 +29,12 @@ def bench(transfer_mb: int = 64, gemm_dim: int = 1024, iters: int = 10):
                       mesh_shape=(1, 1), axis_names=("data", "model"))
     slices = meta.allocate([stage])
     x = jnp.ones((16, transfer_mb << 14), jnp.float32)  # transfer_mb MB
-    meta._transfer_to(slices[0], x, "warmup")
-    meta.transfer_log.clear()
-    meta._transfer_to(slices[0], x, "hop")
-    log = meta.transfer_log[-1]
+    meta.transfer(slices[0], x, "warmup")
+    before = meta.transfer_totals()
+    meta.transfer(slices[0], x, "hop")
+    tot = meta.transfer_totals()
+    log = {"bytes": tot["bytes"] - before["bytes"],
+           "seconds": tot["seconds"] - before["seconds"]}
     bw = log["bytes"] / max(log["seconds"], 1e-9)
     rows.append((f"disagg/transfer_{transfer_mb}MB", log["seconds"] * 1e6,
                  f"bandwidth_GBps={bw / 1e9:.2f}"))

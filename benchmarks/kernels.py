@@ -1,7 +1,7 @@
 """Kernel micro-bench: interpret-mode wall time is meaningless for TPU perf,
 so the derived column reports the *analytic* VMEM working set and arithmetic
 intensity per kernel tile — the numbers that justify the BlockSpec choices
-(see DESIGN.md §7)."""
+(see DESIGN.md §8)."""
 from __future__ import annotations
 
 import time

@@ -1,0 +1,125 @@
+"""Tentpole measurement: microbatch pipelining hides the disaggregation hop.
+
+Sweeps stage count x microbatch count over a stage chain whose per-stage
+compute and per-hop transfer are calibrated 1:1 (``ratio=1``) — the worst
+case for a serial data plane, where half of every batch's wall time is the
+wire. Transfer cost comes from ``MetaAccelerator``'s ``LinkModel``
+(ExpEther-class edge emulated on the local bus, paper §2: ~20% of PCIe);
+compute is a calibrated device-busy stall plus a real jnp op so activations
+actually flow through the sub-slices and bit-exactness stays checkable.
+
+Per (S, k) configuration, reports measured pipeline time against two
+anchors (DESIGN.md §5):
+
+  serial_s    measured ``microbatches=1`` run — the serial lower bound
+              sum(compute) + sum(transfer) paid on the critical path
+  ideal_s     fill/drain-aware pipeline bound over the R = 2S resources:
+              (sum_i(c_i + t_i) + (k-1) * max_r tau_r) / k
+
+``python -m benchmarks.pipeline_overlap`` writes BENCH_pipeline.json so
+the overlap speedup is tracked across PRs (benchmarks/check_regression.py
+gates on it)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import DevicePool
+from repro.core.meta_accel import LinkModel, MetaAccelerator, StageSpec
+
+
+def _make_stage(i: int, compute_s: float, batch: int) -> StageSpec:
+    def fn(slice_, x):
+        # device-busy stall scaled to the microbatch's share of the batch,
+        # then a real op so the activation buffer is produced on-slice
+        time.sleep(compute_s * x.shape[0] / batch)
+        return x + 1.0
+
+    return StageSpec(name=f"s{i}", kind=None, n_devices=1,
+                     mesh_shape=(1, 1), axis_names=("data", "model"),
+                     stage_fn=fn)
+
+
+def bench(stage_counts=(2, 4), microbatches=(1, 2, 4, 8), batch=64,
+          feat=256, compute_s=0.05, ratio=1.0, iters=2, json_path=None):
+    import jax
+
+    dev = jax.devices()[0]
+    nbytes_full = batch * feat * 4
+    transfer_s = compute_s * ratio
+    link = LinkModel(gbytes_per_s=nbytes_full / transfer_s / 1e9)
+    x = np.ones((batch, feat), np.float32)
+    rows = []
+    record = {"bench": "pipeline_overlap", "batch": batch, "feat": feat,
+              "compute_s": compute_s, "transfer_to_compute": ratio,
+              "sweep": {}}
+
+    for S in stage_counts:
+        pool = DevicePool.virtual(S, devices_per_node=1)
+        for d in pool._devices:
+            d.device = dev
+        meta = MetaAccelerator(pool, link=link)
+        stages = [_make_stage(i, compute_s, batch) for i in range(S)]
+        slices = meta.allocate(stages)
+        try:
+            # warm every chunk shape so eager-op compiles (~77ms each on
+            # this host) never land inside a timed region
+            for k in microbatches:
+                meta.run_pipeline(stages, slices, x, microbatches=k)
+
+            def timed(k):
+                best, out = 1e9, None
+                for _ in range(iters):
+                    before = meta.transfer_totals()
+                    t0 = time.perf_counter()
+                    out = meta.run_pipeline(stages, slices, x,
+                                            microbatches=k)
+                    best = min(best, time.perf_counter() - t0)
+                    after = meta.transfer_totals()
+                    moved = after["bytes"] - before["bytes"]
+                    assert moved == S * nbytes_full, (
+                        f"hop accounting drifted: {moved} != "
+                        f"{S * nbytes_full}")
+                return best, out
+
+            serial_s, ref = timed(1)
+            record["sweep"][f"s{S}_k1"] = {"measured_s": serial_s,
+                                           "bytes_per_run": S * nbytes_full}
+            rows.append((f"pipeline/overlap_s{S}_k1",
+                         f"{serial_s * 1e6:.0f}", "serial_baseline"))
+            for k in microbatches:
+                if k <= 1:
+                    continue
+                measured_s, out = timed(k)
+                exact = np.array_equal(np.asarray(ref), np.asarray(out))
+                per_stage = compute_s + transfer_s
+                ideal_s = (S * per_stage
+                           + (k - 1) * max(compute_s, transfer_s)) / k
+                speedup = serial_s / measured_s
+                eff = ideal_s / measured_s
+                record["sweep"][f"s{S}_k{k}"] = {
+                    "measured_s": measured_s, "serial_s": serial_s,
+                    "ideal_s": ideal_s, "speedup": speedup,
+                    "efficiency": eff, "bit_exact": exact,
+                    "microbatches": k, "stages": S,
+                }
+                rows.append((f"pipeline/overlap_s{S}_k{k}",
+                             f"{measured_s * 1e6:.0f}",
+                             f"speedup={speedup:.2f}x eff={eff:.2f} "
+                             f"exact={exact}"))
+        finally:
+            meta.release(slices)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    out = os.path.join(os.path.dirname(__file__), "..",
+                       "BENCH_pipeline.json")
+    for r in bench(json_path=os.path.abspath(out)):
+        print(",".join(str(x) for x in r))

@@ -9,6 +9,10 @@
   kernels         —        per-kernel interpret-mode timing vs jnp oracle
   roofline        —        roofline terms from the dry-run artifacts
   sched_scale     —        acquire latency + jobs/sec vs fleet size
+  pipeline_overlap §2/§3   microbatch pipelining vs the serial data plane
+
+benchmarks/check_regression.py gates a fresh run of the tracked rows
+(sched/acquire, pipeline/overlap) against the committed BENCH_*.json.
 """
 from __future__ import annotations
 
@@ -20,12 +24,14 @@ def main() -> None:
     import os
 
     from benchmarks import (amortization, disagg_overhead, kernels,
-                            lifecycle, roofline, scaling, sched_scale,
-                            sharing)
+                            lifecycle, pipeline_overlap, roofline, scaling,
+                            sched_scale, sharing)
 
-    # the harness run is the canonical refresh of the tracked record
-    bench_sched_json = os.path.abspath(os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_sched.json"))
+    # the harness run is the canonical refresh of the tracked records
+    repo_root = os.path.abspath(os.path.join(
+        os.path.dirname(__file__), ".."))
+    bench_sched_json = os.path.join(repo_root, "BENCH_sched.json")
+    bench_pipeline_json = os.path.join(repo_root, "BENCH_pipeline.json")
     modules = [
         ("lifecycle", lifecycle.bench),
         ("amortization", amortization.bench),
@@ -36,6 +42,8 @@ def main() -> None:
         ("roofline", roofline.bench),
         ("sched_scale",
          lambda: sched_scale.bench(json_path=bench_sched_json)),
+        ("pipeline_overlap",
+         lambda: pipeline_overlap.bench(json_path=bench_pipeline_json)),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -2,5 +2,6 @@ from repro.core.pool import DevicePool, Lease, DeviceInfo, AllocationError  # no
 from repro.core.slice import Slice, SliceState  # noqa: F401
 from repro.core.job import JobSpec, TaskSpec, JobStatus  # noqa: F401
 from repro.core.rm import FlowOSRM  # noqa: F401
-from repro.core.meta_accel import MetaAccelerator  # noqa: F401
+from repro.core.meta_accel import (LinkModel, MetaAccelerator,  # noqa: F401
+                                   StageSpec)
 from repro.core.elastic import ElasticController  # noqa: F401

@@ -7,17 +7,32 @@ of one job land on sub-slices of different accelerator kinds (or disjoint
 device blocks of one kind), and activations hop between sub-slices over the
 interconnect (the FiC-network edge; measured here as transfer bytes/time).
 
+Data plane (DESIGN.md §5): the paper's §2 measurement is that the
+disaggregation penalty is traffic-proportional, not compute-proportional —
+so the hop cost can be *hidden* by overlapping transfer with compute.
+``run_pipeline(..., microbatches=k)`` splits the batch into k microbatches
+and runs them GPipe-style through the stage chain: every hop and every
+stage compute is its own worker thread joined by bounded ``PipelineQueue``s
+(the prefetch pattern from data/pipeline.py), so while stage *i* computes
+microbatch *m*, the hop for *m+1* is already in flight. ``LinkModel``
+emulates an ExpEther-class edge on hosts whose devices share a local bus,
+making the overlap measurable anywhere (benchmarks/pipeline_overlap.py).
+
 Example use: whisper encoder on sub-slice A, decoder on sub-slice B
-(examples/meta_accelerator.py).
+(examples/meta_accelerator.py); disaggregated prefill/decode serving
+(launch/serve.py --microbatches).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.pool import DevicePool
 from repro.core.slice import Slice
+from repro.data.pipeline import PipelineQueue
 
 
 @dataclasses.dataclass
@@ -28,14 +43,87 @@ class StageSpec:
     mesh_shape: Optional[Tuple[int, ...]] = None
     axis_names: Optional[Tuple[str, ...]] = None
     stage_fn: Optional[Callable] = None  # (slice, inputs) -> outputs
+    # Outputs of this stage are treated as exclusively-owned activations:
+    # the hop into the next stage donates their buffers to device_put,
+    # killing the redundant copy. A stage that returns shared/persistent
+    # arrays (params, a cache reused across calls) must opt out.
+    donate_activations: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Emulated disaggregation edge. The paper measures ExpEther at ~20%
+    of local PCIe bandwidth (§2); on hosts where all sub-slices share one
+    physical bus the hop would otherwise be free, so transfers optionally
+    pay ``latency + bytes/bandwidth`` of modeled wire time. The delay is
+    served by the hop worker that owns the edge — concurrent with every
+    other hop and stage — so overlap behaves like real DMA hardware."""
+
+    gbytes_per_s: float = 4.0
+    latency_s: float = 0.0
+
+    def delay_s(self, nbytes: int) -> float:
+        return self.latency_s + nbytes / (self.gbytes_per_s * 1e9)
+
+
+def split_microbatches(inputs: Any, k: int) -> List[Any]:
+    """Split every array leaf of ``inputs`` along axis 0 (the batch axis)
+    into ``k`` near-even chunks — uneven batches allowed, array_split
+    boundaries. Non-array leaves are replicated into every chunk; every
+    array leaf must agree on the batch size."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(inputs)
+    is_batched = [hasattr(a, "shape") and getattr(a, "ndim", 0) >= 1
+                  for a in leaves]
+    sizes = {a.shape[0] for a, b in zip(leaves, is_batched) if b}
+    if len(sizes) != 1:
+        raise ValueError(
+            "microbatching needs exactly one batch axis across array "
+            f"leaves; got dim-0 sizes {sorted(sizes)}")
+    batch = sizes.pop()
+    if not 1 <= k <= batch:
+        raise ValueError(f"microbatches={k} not in [1, batch={batch}]")
+    base, extra = divmod(batch, k)
+    chunks, off = [], 0
+    for i in range(k):
+        n = base + (1 if i < extra else 0)
+        sl = slice(off, off + n)
+        chunks.append(jax.tree.unflatten(treedef, [
+            a[sl] if b else a for a, b in zip(leaves, is_batched)]))
+        off += n
+    return chunks
+
+
+def concat_microbatches(chunks: Sequence[Any]) -> Any:
+    """Inverse of split_microbatches over stage outputs: concatenate every
+    leaf along axis 0 (outputs must be arrays with a batch axis)."""
+    import jax
+    import jax.numpy as jnp
+
+    flat = [jax.tree.flatten(c) for c in chunks]
+    treedef = flat[0][1]
+    if any(td != treedef for _, td in flat[1:]):
+        raise ValueError(
+            "stage outputs differ in pytree structure across microbatches")
+    leaves = [jnp.concatenate(parts, axis=0)
+              for parts in zip(*(l for l, _ in flat))]
+    return jax.tree.unflatten(treedef, leaves)
 
 
 class MetaAccelerator:
     """Co-allocates one sub-slice per stage and runs the stage pipeline."""
 
-    def __init__(self, pool: DevicePool):
+    def __init__(self, pool: DevicePool, link: Optional[LinkModel] = None,
+                 transfer_log_maxlen: int = 4096):
         self.pool = pool
-        self.transfer_log: List[dict] = []
+        self.link = link
+        # Bounded + lock-guarded: pipelined hop workers append from their
+        # own threads; exact running totals survive deque eviction.
+        self.transfer_log: "collections.deque" = collections.deque(
+            maxlen=transfer_log_maxlen)
+        self._log_lock = threading.Lock()
+        self._totals = {"hops": 0, "bytes": 0, "seconds": 0.0}
 
     def allocate(self, stages: Sequence[StageSpec]) -> List[Slice]:
         slices = []
@@ -44,52 +132,191 @@ class MetaAccelerator:
                 s = Slice(name=f"meta/{st.name}", pool=self.pool,
                           n_devices=st.n_devices, mesh_shape=st.mesh_shape,
                           axis_names=st.axis_names, kind=st.kind)
+                # appended before attach so the rollback below also tears
+                # down a stage that fails between attach and launch
+                # (teardown is a no-op for a CREATED slice)
+                slices.append(s)
                 s.attach_device()
                 s.launch_machine()
-                slices.append(s)
         except Exception:
             for s in slices:
-                if s.lease is not None:
-                    self.pool.release(s.lease)
+                s.teardown()
             raise
         return slices
 
     def run_pipeline(self, stages: Sequence[StageSpec],
-                     slices: Sequence[Slice], inputs: Any) -> Any:
+                     slices: Sequence[Slice], inputs: Any, *,
+                     microbatches: int = 1, queue_depth: int = 2) -> Any:
         """Run stages in order, transferring activations between
-        sub-slices (the disaggregated-network hop)."""
-        x = inputs
-        for st, s in zip(stages, slices):
-            x = self._transfer_to(s, x, st.name)
-            if st.stage_fn is not None:
-                x = st.stage_fn(s, x)
-        return x
+        sub-slices (the disaggregated-network hop).
+
+        ``microbatches=1`` is the serial path: each hop is paid in full on
+        the critical path. ``microbatches=k`` splits the batch along axis
+        0 and pipelines the chunks (DESIGN.md §5); the result is the
+        concatenation of the chunk outputs, bit-exact vs. serial for
+        batch-row-independent stage functions."""
+        if microbatches <= 1:
+            import jax
+            x = inputs
+            for st, s in zip(stages, slices):
+                x = self.transfer(s, x, st.name)
+                if st.stage_fn is not None:
+                    x = st.stage_fn(s, x)
+            # drain like the microbatched path does, so both return
+            # settled arrays and serial-vs-pipelined timings compare the
+            # same amount of completed work
+            jax.block_until_ready(x)
+            return x
+        return self._run_microbatched(stages, slices, inputs,
+                                      microbatches, queue_depth)
 
     def release(self, slices: Sequence[Slice]):
+        """Tear every stage down through the slice lifecycle
+        (detach_device + destroy_machine), so stages end DESTROYED with
+        their transitions timed — not as dead ATTACHED husks."""
         for s in slices:
-            if s.lease is not None:
-                self.pool.release(s.lease)
-                s.lease = None
-            s.mesh = None
+            s.teardown()
 
-    # ------------------------------------------------------------------
-    def _transfer_to(self, dst: Slice, x: Any, stage: str) -> Any:
-        """Move activations onto the destination sub-slice, logging the
-        hop (bytes, seconds) — the ExpEther/FiC-network edge."""
+    # -- single-hop API ----------------------------------------------------
+    def transfer(self, dst: Slice, x: Any, stage: str = "hop", *,
+                 donate: bool = False) -> Any:
+        """Public blocking single-hop transfer: move activations onto
+        ``dst`` and log the hop (bytes, seconds) — the ExpEther/FiC edge.
+        Returns ``x`` untouched when ``dst`` has no mesh."""
+        moved, complete = self.transfer_async(dst, x, stage, donate=donate)
+        complete()
+        return moved
+
+    def transfer_async(self, dst: Slice, x: Any, stage: str = "hop", *,
+                       donate: bool = False):
+        """Non-blocking hop: issue the device_put and return
+        ``(moved, complete)`` immediately. ``complete()`` serves any
+        modeled wire time, waits for the data to land, and logs the hop —
+        the pipeline calls it from hop workers so per-hop timing stays off
+        every compute thread."""
         import jax
 
         if dst.mesh is None or x is None:
-            return x
+            return x, (lambda: None)
         t0 = time.perf_counter()
-        target = jax.sharding.NamedSharding(
-            dst.mesh, jax.sharding.PartitionSpec())
-        moved = jax.tree.map(lambda a: jax.device_put(a, target), x)
-        jax.block_until_ready(moved)
+        target = dst.replicated_sharding()
+        moved = jax.tree.map(
+            lambda a: jax.device_put(a, target, donate=donate), x)
         # a.nbytes reads shape/dtype metadata only; np.asarray(a) would
         # copy every activation leaf back to the host just to count bytes
         nbytes = sum(a.nbytes for a in jax.tree.leaves(moved))
-        self.transfer_log.append({
-            "stage": stage, "bytes": int(nbytes),
-            "seconds": time.perf_counter() - t0,
-        })
-        return moved
+        delay = self.link.delay_s(nbytes) if self.link is not None else 0.0
+        done = [False]
+
+        def complete():
+            if done[0]:
+                return
+            done[0] = True
+            if delay:
+                remaining = delay - (time.perf_counter() - t0)
+                if remaining > 0:
+                    time.sleep(remaining)
+            jax.block_until_ready(moved)
+            self._log_hop(stage, nbytes, time.perf_counter() - t0)
+
+        return moved, complete
+
+    def transfer_totals(self) -> Dict[str, float]:
+        """Exact running aggregate over *all* hops ever logged — the
+        bounded transfer_log may have evicted old entries."""
+        with self._log_lock:
+            return dict(self._totals)
+
+    # retained for callers of the old private API
+    def _transfer_to(self, dst: Slice, x: Any, stage: str) -> Any:
+        return self.transfer(dst, x, stage)
+
+    def _log_hop(self, stage: str, nbytes: int, seconds: float):
+        with self._log_lock:
+            self.transfer_log.append({
+                "stage": stage, "bytes": int(nbytes), "seconds": seconds})
+            self._totals["hops"] += 1
+            self._totals["bytes"] += int(nbytes)
+            self._totals["seconds"] += seconds
+
+    # -- pipelined data plane ----------------------------------------------
+    def _run_microbatched(self, stages: Sequence[StageSpec],
+                          slices: Sequence[Slice], inputs: Any,
+                          k: int, depth: int) -> Any:
+        """GPipe-style schedule over 2S resources — S hops + S stage
+        computes, each a worker thread, joined by bounded queues:
+
+            hop_0 -> comp_0 -> hop_1 -> comp_1 -> ... -> results
+
+        A hop worker owns one fabric edge: it issues the non-blocking
+        device_put (donating the producing stage's activation buffers),
+        serves the modeled wire time, and logs completion — all off the
+        compute threads. First worker error stops every queue and is
+        re-raised here; order is preserved end to end so the concatenated
+        result matches the serial path bit for bit."""
+        import jax
+
+        chunks = split_microbatches(inputs, k)
+        n = len(stages)
+        stop = threading.Event()
+        errors: List[BaseException] = []
+        err_lock = threading.Lock()
+        hop_q = [PipelineQueue(depth, stop=stop) for _ in range(n)]
+        comp_q = [PipelineQueue(depth, stop=stop) for _ in range(n)]
+        results: List[Any] = [None] * k
+
+        def fail(e: BaseException):
+            with err_lock:
+                errors.append(e)
+            stop.set()
+
+        def hop_worker(i: int):
+            try:
+                donate = i > 0 and stages[i - 1].donate_activations
+                for m, x in hop_q[i]:
+                    moved, complete = self.transfer_async(
+                        slices[i], x, stages[i].name, donate=donate)
+                    complete()
+                    if not comp_q[i].put((m, moved)):
+                        return
+                comp_q[i].close()
+            except BaseException as e:  # noqa: BLE001
+                fail(e)
+
+        def comp_worker(i: int):
+            try:
+                for m, x in comp_q[i]:
+                    y = (stages[i].stage_fn(slices[i], x)
+                         if stages[i].stage_fn is not None else x)
+                    if i + 1 < n:
+                        if not hop_q[i + 1].put((m, y)):
+                            return
+                    else:
+                        results[m] = y
+                if i + 1 < n:
+                    hop_q[i + 1].close()
+            except BaseException as e:  # noqa: BLE001
+                fail(e)
+
+        threads = [threading.Thread(target=hop_worker, args=(i,),
+                                    daemon=True, name=f"meta-hop-{i}")
+                   for i in range(n)]
+        threads += [threading.Thread(target=comp_worker, args=(i,),
+                                     daemon=True, name=f"meta-comp-{i}")
+                    for i in range(n)]
+        for t in threads:
+            t.start()
+        try:
+            for m, c in enumerate(chunks):
+                if not hop_q[0].put((m, c)):
+                    break
+            hop_q[0].close()
+            for t in threads:
+                t.join()
+        finally:
+            stop.set()
+        if errors:
+            raise errors[0]
+        out = concat_microbatches(results)
+        jax.block_until_ready(out)  # drain: callers get settled arrays
+        return out

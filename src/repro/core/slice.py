@@ -40,13 +40,20 @@ class LifecycleError(RuntimeError):
     pass
 
 
+# pre-states are tuples: detach_device accepts any settled post-attach
+# state so a slice that never ran a task (meta-accelerator stage, aborted
+# job) can still return its devices and end DESTROYED instead of rotting
+# in ATTACHED. RUNNING is deliberately excluded — interrupting a live
+# task is the elasticity layer's decision, not a teardown shortcut.
 _VALID = {
-    "attach_device": (SliceState.CREATED, SliceState.ATTACHED),
-    "launch_machine": (SliceState.ATTACHED, SliceState.LAUNCHED),
-    "prepare_task": (SliceState.LAUNCHED, SliceState.PREPARED),
-    "launch_task": (SliceState.PREPARED, SliceState.RUNNING),
-    "detach_device": (SliceState.DONE, SliceState.DETACHED),
-    "destroy_machine": (SliceState.DETACHED, SliceState.DESTROYED),
+    "attach_device": ((SliceState.CREATED,), SliceState.ATTACHED),
+    "launch_machine": ((SliceState.ATTACHED,), SliceState.LAUNCHED),
+    "prepare_task": ((SliceState.LAUNCHED,), SliceState.PREPARED),
+    "launch_task": ((SliceState.PREPARED,), SliceState.RUNNING),
+    "detach_device": ((SliceState.ATTACHED, SliceState.LAUNCHED,
+                       SliceState.PREPARED, SliceState.DONE),
+                      SliceState.DETACHED),
+    "destroy_machine": ((SliceState.DETACHED,), SliceState.DESTROYED),
 }
 
 
@@ -66,13 +73,16 @@ class Slice:
     executable: Any = None
     timings: Dict[str, float] = dataclasses.field(default_factory=dict)
     events: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    # (mesh, NamedSharding) cache for replicated_sharding()
+    _repl_sharding: Any = dataclasses.field(default=None, repr=False)
 
     # ------------------------------------------------------------------
     def _transition(self, op: str, fn: Callable[[], Any]):
         pre, post = _VALID[op]
-        if self.state != pre:
+        if self.state not in pre:
+            want = " or ".join(s.value for s in pre)
             raise LifecycleError(
-                f"{self.name}: {op} requires state {pre.value}, "
+                f"{self.name}: {op} requires state {want}, "
                 f"slice is {self.state.value}")
         t0 = time.perf_counter()
         self.events.append((t0, f"{op}:start"))
@@ -137,7 +147,38 @@ class Slice:
         def fn():
             self.mesh = None
             self.executable = None
+            self._repl_sharding = None
         return self._transition("destroy_machine", fn)
+
+    def teardown(self):
+        """Run whatever lifecycle teardown remains from the current
+        state: detach_device (if a lease-bearing state) then
+        destroy_machine. No-op for CREATED/DESTROYED slices, so it is
+        safe on partially-constructed stage sets (meta-accelerator
+        rollback) and idempotent. Raises for a RUNNING slice — stopping
+        a live task is the elasticity layer's decision, and silently
+        skipping it would leak the lease."""
+        if self.state == SliceState.RUNNING:
+            raise LifecycleError(
+                f"{self.name}: cannot teardown a running slice")
+        if self.state in _VALID["detach_device"][0]:
+            self.detach_device()
+        if self.state == SliceState.DETACHED:
+            self.destroy_machine()
+
+    def replicated_sharding(self):
+        """Cached fully-replicated NamedSharding over this slice's mesh.
+        The data plane issues one device_put per microbatch per hop;
+        rebuilding the sharding object each time is measurable overhead,
+        so it is cached until the mesh changes (None while no mesh)."""
+        if self.mesh is None:
+            return None
+        cached = self._repl_sharding
+        if cached is None or cached[0] is not self.mesh:
+            import jax
+            self._repl_sharding = (self.mesh, jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec()))
+        return self._repl_sharding[1]
 
     # ------------------------------------------------------------------
     def run_lifecycle(self, prepare_fn=None, task_fn=None,

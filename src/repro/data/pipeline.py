@@ -24,6 +24,53 @@ import jax.numpy as jnp
 from repro.models.config import ModelConfig
 
 
+class PipelineQueue:
+    """Bounded stage-boundary queue — the prefetch pattern of
+    ``make_data_iterator`` factored out so the meta-accelerator data plane
+    (core/meta_accel.py, DESIGN.md §5) can join its hop/compute workers
+    with the same machinery.
+
+    Semantics: blocking bounded handoff, ``close()`` terminates the
+    consumer after in-flight items drain, and every put/get watches a
+    shared stop event so no producer or consumer thread is ever stranded
+    on a peer that died (error paths call ``stop()``)."""
+
+    CLOSE = object()
+
+    def __init__(self, maxsize: int = 2,
+                 stop: Optional[threading.Event] = None):
+        self._q: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self.stop_event = stop if stop is not None else threading.Event()
+
+    def put(self, item) -> bool:
+        """Blocking put. Returns False (item dropped) once stopped."""
+        while not self.stop_event.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def close(self):
+        """End-of-stream: consumers finish after draining queued items."""
+        self.put(PipelineQueue.CLOSE)
+
+    def stop(self):
+        """Abort both sides immediately (error / cleanup path)."""
+        self.stop_event.set()
+
+    def __iter__(self):
+        while not self.stop_event.is_set():
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if item is PipelineQueue.CLOSE:
+                return
+            yield item
+
+
 class SyntheticLMDataset:
     """Seeded, random-access synthetic LM token stream."""
 
@@ -69,16 +116,16 @@ def make_data_iterator(dataset: SyntheticLMDataset, start_step: int = 0,
                 if k in shardings else jnp.asarray(v)
                 for k, v in host.items()}
 
-    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
-    stop = threading.Event()
+    pq = PipelineQueue(maxsize=prefetch)
 
     def worker():
         step = start_step
-        while not stop.is_set():
+        while not pq.stop_event.is_set():
             if stop_step is not None and step >= stop_step:
-                q.put(None)
+                pq.close()
                 return
-            q.put((step, produce(step)))
+            if not pq.put((step, produce(step))):
+                return
             step += 1
 
     t = threading.Thread(target=worker, daemon=True)
@@ -86,12 +133,9 @@ def make_data_iterator(dataset: SyntheticLMDataset, start_step: int = 0,
 
     def gen():
         try:
-            while True:
-                item = q.get()
-                if item is None:
-                    return
+            for item in pq:
                 yield item
         finally:
-            stop.set()
+            pq.stop()
 
     return gen()

@@ -73,7 +73,7 @@ def sharding_policy(cfg: ModelConfig, shape: Optional[ShapeConfig],
 
     n_all = n_data * n_model
 
-    # ---- strategy selection (napkin-math, see DESIGN.md §5) ----
+    # ---- strategy selection (napkin-math, see DESIGN.md §6) ----
     # TP costs ~16*B_loc*S*d wire bytes per layer (4 ring all-reduces of the
     # activations); FSDP/pure-DP costs ~3x layer-param bytes (gather fwd,
     # re-gather bwd under remat, reduce-scatter grads). At train_4k sizes

@@ -4,9 +4,11 @@ by the test suite instead of at paper-figure time."""
 import pytest
 
 import benchmarks.amortization as amortization
+import benchmarks.check_regression as check_regression
 import benchmarks.disagg_overhead as disagg_overhead
 import benchmarks.kernels as kernels
 import benchmarks.lifecycle as lifecycle
+import benchmarks.pipeline_overlap as pipeline_overlap
 import benchmarks.roofline as roofline
 import benchmarks.scaling as scaling
 import benchmarks.sched_scale as sched_scale
@@ -26,6 +28,9 @@ TINY = [
     ("sched_scale", lambda: sched_scale.bench(
         sizes=(64,), baseline_sizes=(64,), idx_iters=20, seed_iters=5,
         n_jobs=8, jobs_pool=32)),
+    ("pipeline_overlap", lambda: pipeline_overlap.bench(
+        stage_counts=(2,), microbatches=(1, 2), batch=8,
+        compute_s=0.002, iters=1)),
 ]
 
 
@@ -51,3 +56,87 @@ def test_sched_scale_speedup_floor():
     idx = float(by_name["sched_scale/acquire_indexed_4096"][1])
     seed = float(by_name["sched_scale/acquire_seed_4096"][1])
     assert seed / idx >= 3.0, f"speedup {seed / idx:.1f}x < 3x"
+
+
+def test_pipeline_overlap_speedup_floor():
+    """The pipelined data plane must beat the serial path on a 4-stage,
+    transfer:compute 1:1 chain (acceptance floor is 2x at k=8;
+    benchmarks/run.py measures that). Tier-1 asserts a conservative
+    1.25x with up to 3 attempts, and only on a box that can time: when
+    the measured serial baseline blows past its analytic model
+    (4 stages x 40ms = 160ms), the host is too loaded for thread-wakeup
+    timing and the attempt is discarded — a data plane that silently
+    degraded to serial still fails every calm attempt."""
+    compute_s = 0.02
+    model_serial_s = 4 * (compute_s + compute_s)
+    best, calm_attempts = 0.0, 0
+    for _ in range(3):
+        rows = pipeline_overlap.bench(stage_counts=(4,),
+                                      microbatches=(1, 8),
+                                      compute_s=compute_s, iters=2)
+        by_name = {r[0]: r for r in rows}
+        assert "exact=True" in by_name["pipeline/overlap_s4_k8"][2]
+        serial = float(by_name["pipeline/overlap_s4_k1"][1])
+        pipelined = float(by_name["pipeline/overlap_s4_k8"][1])
+        if serial > 1.5 * model_serial_s * 1e6:
+            continue  # loaded box: even the serial path can't hold time
+        calm_attempts += 1
+        best = max(best, serial / pipelined)
+        if best >= 1.25:
+            return
+    if calm_attempts == 0:
+        pytest.skip("host too loaded for overlap timing "
+                    "(serial baseline >1.5x its analytic model)")
+    assert best >= 1.25, f"overlap speedup {best:.2f}x < 1.25x"
+
+
+def test_check_regression_compare_logic():
+    """Pure gate logic: identical records pass, >slack regressions fail
+    in the right direction, metrics missing from one side are skipped."""
+    committed = {"sched/acquire_1000": (10.0, "lower"),
+                 "pipeline/overlap_s4_k8": (4.0, "higher"),
+                 "sched/acquire_100000": (70.0, "lower")}
+    ok = {"sched/acquire_1000": (12.0, "lower"),
+          "pipeline/overlap_s4_k8": (3.0, "higher")}
+    assert check_regression.compare(ok, committed, slack=2.0) == []
+    bad = {"sched/acquire_1000": (25.0, "lower"),
+           "pipeline/overlap_s4_k8": (1.5, "higher")}
+    fails = check_regression.compare(bad, committed, slack=2.0)
+    assert len(fails) == 2
+    assert any("sched/acquire_1000" in f for f in fails)
+    assert any("pipeline/overlap_s4_k8" in f for f in fails)
+
+
+def test_check_regression_committed_records_parse():
+    """The committed BENCH_*.json files must stay extractable — the gate
+    silently gating nothing would be a broken gate."""
+    committed = check_regression.load_committed()
+    assert any(k.startswith("sched/acquire") for k in committed)
+    assert any(k.startswith("pipeline/overlap") for k in committed)
+    for name, (value, direction) in committed.items():
+        assert value > 0 and direction in ("lower", "higher"), name
+
+
+def test_check_regression_gate_smoke():
+    """End-to-end gate smoke at tiny sweep sizes: a fresh mini-run must
+    clear the committed records at a generous slack (this exercises the
+    fresh-run + extract + compare plumbing, not the perf floor)."""
+    fails = check_regression.run_gate(
+        slack=50.0,
+        sched_kwargs=dict(sizes=(1000,), baseline_sizes=(), idx_iters=50,
+                          n_jobs=8, jobs_pool=64),
+        pipe_kwargs=dict(stage_counts=(4,), microbatches=(1, 8),
+                         compute_s=0.005, iters=1))
+    assert fails == [], f"gate smoke failed: {fails}"
+
+
+def test_check_regression_fails_loud_without_records(tmp_path):
+    """Missing/unparseable committed records must fail the gate, not
+    silently gate zero rows."""
+    fails = check_regression.run_gate(
+        slack=50.0, root=str(tmp_path),
+        sched_kwargs=dict(sizes=(64,), baseline_sizes=(), idx_iters=10,
+                          n_jobs=4, jobs_pool=16),
+        pipe_kwargs=dict(stage_counts=(2,), microbatches=(1, 2),
+                         batch=8, compute_s=0.002, iters=1))
+    assert len(fails) == 1 and "no gated rows" in fails[0]

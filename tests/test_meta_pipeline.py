@@ -1,0 +1,252 @@
+"""Pipelined meta-accelerator data plane (DESIGN.md §5): bit-exact
+microbatching vs. the serial path, exact per-hop transfer accounting,
+bounded thread-safe transfer log, error propagation, and lifecycle
+teardown on release."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import DevicePool
+from repro.core.meta_accel import (LinkModel, MetaAccelerator, StageSpec,
+                                   concat_microbatches, split_microbatches)
+from repro.core.slice import SliceState
+
+
+def _real_pool(n, kinds=None):
+    """Virtual fleet bound to the local jax device so meshes build."""
+    pool = DevicePool.virtual(n, devices_per_node=1, kinds=kinds)
+    dev = jax.devices()[0]
+    for d in pool._devices:
+        d.device = dev
+    return pool
+
+
+def _stages(fns):
+    return [StageSpec(name=f"s{i}", kind=None, n_devices=1,
+                      mesh_shape=(1, 1), axis_names=("data", "model"),
+                      stage_fn=fn) for i, fn in enumerate(fns)]
+
+
+def _payload(batch):
+    rng = np.random.default_rng(0)
+    return {"a": rng.standard_normal((batch, 4)).astype(np.float32),
+            "b": rng.standard_normal((batch, 3)).astype(np.float32),
+            "gain": 3.0}  # non-array leaf: replicated into every chunk
+
+
+# batch-row-independent stages over a pytree payload (elementwise ops,
+# within-row reductions, concat) — bit-exact under any batch split
+_FNS = [
+    lambda s, x: {"a": x["a"] * x["gain"], "b": x["b"] + 1.0},
+    lambda s, x: {"a": x["a"] + x["b"].sum(axis=1, keepdims=True),
+                  "b": x["b"]},
+    lambda s, x: jnp.concatenate([x["a"], x["b"]], axis=1),
+]
+
+
+def _run(meta, stages, slices, inputs, k):
+    return meta.run_pipeline(stages, slices, inputs, microbatches=k)
+
+
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_pipelined_bit_exact_vs_serial(k):
+    """Pytree payload, uneven batch (12 does not divide 8): the
+    concatenated microbatch output must equal the serial path bit for
+    bit."""
+    pool = _real_pool(3)
+    meta = MetaAccelerator(pool)
+    stages = _stages(_FNS)
+    slices = meta.allocate(stages)
+    try:
+        x = _payload(batch=12)
+        ref = _run(meta, stages, slices, x, 1)
+        out = _run(meta, stages, slices, x, k)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+    finally:
+        meta.release(slices)
+
+
+def test_pipelined_with_link_model_bit_exact():
+    pool = _real_pool(3)
+    meta = MetaAccelerator(pool, link=LinkModel(gbytes_per_s=1.0,
+                                                latency_s=1e-4))
+    stages = _stages(_FNS)
+    slices = meta.allocate(stages)
+    try:
+        x = _payload(batch=7)  # uneven for k=2 as well
+        ref = _run(meta, stages, slices, x, 1)
+        out = _run(meta, stages, slices, x, 2)
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+    finally:
+        meta.release(slices)
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_transfer_accounting_exact(k):
+    """Logged bytes must equal sum(leaf.nbytes) x hops regardless of the
+    microbatch split (uneven chunks for k=4 over batch 10), and the hop
+    count must be stages x k."""
+    pool = _real_pool(3)
+    meta = MetaAccelerator(pool)
+    stages = _stages([None, None, None])  # passthrough: payload unchanged
+    slices = meta.allocate(stages)
+    try:
+        x = {"a": np.ones((10, 4), np.float32),
+             "b": np.ones((10, 2), np.int32)}
+        leaf_bytes = 10 * 4 * 4 + 10 * 2 * 4
+        before = meta.transfer_totals()
+        _run(meta, stages, slices, x, k)
+        after = meta.transfer_totals()
+        assert after["bytes"] - before["bytes"] == leaf_bytes * len(stages)
+        assert after["hops"] - before["hops"] == len(stages) * k
+        assert after["seconds"] > before["seconds"]
+    finally:
+        meta.release(slices)
+
+
+def test_transfer_log_bounded_totals_survive():
+    """The deque evicts old hops; transfer_totals() stays exact."""
+    pool = _real_pool(2)
+    meta = MetaAccelerator(pool, transfer_log_maxlen=4)
+    stages = _stages([None, None])
+    slices = meta.allocate(stages)
+    try:
+        x = {"a": np.ones((8, 2), np.float32)}
+        _run(meta, stages, slices, x, 8)  # 16 hops through a 4-entry log
+        assert len(meta.transfer_log) == 4
+        tot = meta.transfer_totals()
+        assert tot["hops"] == 16
+        assert tot["bytes"] == 8 * 2 * 4 * 2  # full payload x 2 stages
+    finally:
+        meta.release(slices)
+
+
+def test_transfer_log_thread_safe():
+    """Concurrent public-API hops from many threads: no lost updates."""
+    pool = _real_pool(1)
+    meta = MetaAccelerator(pool, transfer_log_maxlen=64)
+    stages = _stages([None])
+    slices = meta.allocate(stages)
+    try:
+        x = np.ones((4, 4), np.float32)
+
+        def hammer():
+            for _ in range(25):
+                meta.transfer(slices[0], x, "t")
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        tot = meta.transfer_totals()
+        assert tot["hops"] == 100
+        assert tot["bytes"] == 100 * 4 * 4 * 4
+    finally:
+        meta.release(slices)
+
+
+def test_release_runs_lifecycle_teardown():
+    """Slices must end DESTROYED (not a dead ATTACHED/LAUNCHED husk),
+    with the teardown transitions timed."""
+    pool = DevicePool.virtual(8)
+    meta = MetaAccelerator(pool)
+    slices = meta.allocate([StageSpec(name="a", kind=None, n_devices=2),
+                            StageSpec(name="b", kind=None, n_devices=2)])
+    assert all(s.state == SliceState.LAUNCHED for s in slices)
+    meta.release(slices)
+    assert all(s.state == SliceState.DESTROYED for s in slices)
+    assert all(s.lease is None and s.mesh is None for s in slices)
+    assert all("detach_device" in s.timings
+               and "destroy_machine" in s.timings for s in slices)
+    assert pool.utilization() == 0.0
+    meta.release(slices)  # idempotent
+
+
+def test_teardown_refuses_running_slice():
+    """Silently skipping a RUNNING slice would leak its lease — teardown
+    must raise instead (stopping live tasks is elasticity's job)."""
+    from repro.core.slice import LifecycleError, Slice
+    pool = DevicePool.virtual(4)
+    s = Slice(name="s", pool=pool, n_devices=2)
+    s.attach_device()
+    s.state = SliceState.RUNNING  # mid-task, as another thread sees it
+    with pytest.raises(LifecycleError, match="running"):
+        s.teardown()
+
+
+def test_allocate_rollback_tears_down():
+    """A mid-allocate failure must return every already-attached stage's
+    devices through the lifecycle, not leave them leased."""
+    pool = DevicePool.virtual(4)
+    meta = MetaAccelerator(pool)
+    from repro.core import AllocationError
+    with pytest.raises(AllocationError):
+        meta.allocate([StageSpec(name="ok", kind=None, n_devices=2),
+                       StageSpec(name="toobig", kind=None, n_devices=8)])
+    assert pool.utilization() == 0.0
+
+
+def test_allocate_rollback_on_launch_failure():
+    """A stage that attaches but fails launch_machine (bad mesh shape)
+    must release its own lease too, not just the earlier stages'."""
+    pool = _real_pool(4)
+    meta = MetaAccelerator(pool)
+    with pytest.raises(ValueError):
+        # 2 devices cannot reshape into a (1, 1) mesh
+        meta.allocate([StageSpec(name="ok", kind=None, n_devices=1,
+                                 mesh_shape=(1, 1),
+                                 axis_names=("data", "model")),
+                       StageSpec(name="badmesh", kind=None, n_devices=2,
+                                 mesh_shape=(1, 1),
+                                 axis_names=("data", "model"))])
+    assert pool.utilization() == 0.0
+
+
+def test_pipelined_stage_error_propagates():
+    pool = _real_pool(2)
+    meta = MetaAccelerator(pool)
+
+    def boom(s, x):
+        raise RuntimeError("stage exploded")
+
+    stages = _stages([lambda s, x: x + 1.0, boom])
+    slices = meta.allocate(stages)
+    try:
+        with pytest.raises(RuntimeError, match="stage exploded"):
+            _run(meta, stages, slices, np.ones((8, 2), np.float32), 4)
+    finally:
+        meta.release(slices)
+
+
+def test_microbatch_validation():
+    with pytest.raises(ValueError, match="batch axis"):
+        split_microbatches(1, 2)  # no array leaves
+    with pytest.raises(ValueError, match="not in"):
+        split_microbatches(np.ones((3, 2)), 4)  # k > batch
+    with pytest.raises(ValueError, match="batch axis"):
+        split_microbatches({"a": np.ones((4, 2)),
+                            "b": np.ones((5, 2))}, 2)  # disagreeing dim 0
+    chunks = split_microbatches(np.arange(10), 4)
+    assert [c.shape[0] for c in chunks] == [3, 3, 2, 2]
+    assert np.array_equal(np.asarray(concat_microbatches(chunks)),
+                          np.arange(10))
+
+
+def test_serial_path_backward_compatible():
+    """mesh-less virtual slices + scalar payload: the k=1 path must keep
+    the seed semantics (transfer is a no-op, stages chain)."""
+    pool = DevicePool.virtual(4)
+    meta = MetaAccelerator(pool)
+    stages = [StageSpec(name="inc", kind=None, n_devices=2,
+                        stage_fn=lambda s, x: x + 1),
+              StageSpec(name="dbl", kind=None, n_devices=2,
+                        stage_fn=lambda s, x: x * 2)]
+    slices = meta.allocate(stages)
+    assert meta.run_pipeline(stages, slices, 1) == 4
+    assert meta._transfer_to(slices[0], 1, "legacy") == 1  # old private API
+    meta.release(slices)
