@@ -8,6 +8,10 @@ fresh run are compared — a machine that skips a size is not a failure):
                            (lower is better)
   pipeline/overlap_<cfg>   BENCH_pipeline.json sweep[cfg].speedup
                            (higher is better; k=1 baselines not gated)
+  preempt/speedup_<n>      BENCH_preempt.json  pools[n].speedup
+                           (higher is better; capped at record time)
+  defrag/largest_run_ratio_<n>  BENCH_preempt.json  defrag[n]
+                           .largest_run_ratio (higher is better)
 
 The default slack factor of 2x absorbs machine-to-machine variance while
 still catching the failure modes that matter: an accidental O(n) rescan
@@ -28,7 +32,10 @@ import tempfile
 from typing import Dict, List, Tuple
 
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-COMMITTED = ("BENCH_sched.json", "BENCH_pipeline.json")
+if ROOT not in sys.path:  # `python benchmarks/check_regression.py` puts
+    sys.path.insert(0, ROOT)  # benchmarks/ first — make the package import
+COMMITTED = ("BENCH_sched.json", "BENCH_pipeline.json",
+             "BENCH_preempt.json")
 
 Metric = Tuple[float, str]  # (value, "lower"|"higher" is better)
 
@@ -45,6 +52,14 @@ def extract_metrics(record: dict) -> Dict[str, Metric]:
         for cfg, cell in record.get("sweep", {}).items():
             if "speedup" in cell:
                 out[f"pipeline/overlap_{cfg}"] = (cell["speedup"], "higher")
+    if record.get("bench") == "preempt_frag":
+        for n, cell in record.get("pools", {}).items():
+            if "speedup" in cell:
+                out[f"preempt/speedup_{n}"] = (cell["speedup"], "higher")
+        for n, cell in record.get("defrag", {}).items():
+            if "largest_run_ratio" in cell:
+                out[f"defrag/largest_run_ratio_{n}"] = (
+                    cell["largest_run_ratio"], "higher")
     return out
 
 
@@ -76,10 +91,11 @@ def compare(fresh: Dict[str, Metric], committed: Dict[str, Metric],
 
 
 def run_gate(slack: float = 2.0, sched_kwargs: dict = None,
-             pipe_kwargs: dict = None, root: str = ROOT) -> List[str]:
+             pipe_kwargs: dict = None, preempt_kwargs: dict = None,
+             root: str = ROOT) -> List[str]:
     """Run the gated benchmarks fresh (into temp files — the committed
     records are never touched) and compare. Returns failure strings."""
-    from benchmarks import pipeline_overlap, sched_scale
+    from benchmarks import pipeline_overlap, preempt_frag, sched_scale
 
     committed = load_committed(root)
     sched_kwargs = dict(sched_kwargs if sched_kwargs is not None else
@@ -89,11 +105,18 @@ def run_gate(slack: float = 2.0, sched_kwargs: dict = None,
                              n_jobs=100, jobs_pool=256))
     pipe_kwargs = dict(pipe_kwargs if pipe_kwargs is not None else
                        dict(stage_counts=(4,), microbatches=(1, 8)))
+    preempt_kwargs = dict(preempt_kwargs if preempt_kwargs is not None else
+                          # committed-record sizes — the speedup row only
+                          # needs the preempt path to stay ~an order of
+                          # magnitude ahead of the FIFO drain
+                          dict(pool_size=10_000, attempts=3,
+                               defrag_pool=1024))
     fresh: Dict[str, Metric] = {}
     with tempfile.TemporaryDirectory() as td:
         for mod, kwargs, fname in (
                 (sched_scale, sched_kwargs, "sched.json"),
-                (pipeline_overlap, pipe_kwargs, "pipe.json")):
+                (pipeline_overlap, pipe_kwargs, "pipe.json"),
+                (preempt_frag, preempt_kwargs, "preempt.json")):
             path = os.path.join(td, fname)
             mod.bench(json_path=path, **kwargs)
             with open(path) as f:

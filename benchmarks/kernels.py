@@ -45,7 +45,6 @@ def bench():
                  f"vmem_KB={vmem // 1024};ai={flops / vmem:.0f}"))
 
     # interpret-mode correctness spot check timing (CPU, not perf)
-    from repro.kernels import ops
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(ks[0], (1, 2, 256, 64))
     k = jax.random.normal(ks[1], (1, 1, 256, 64))

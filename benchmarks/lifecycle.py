@@ -37,7 +37,6 @@ def bench(steps: int = 6, shapes=None):
                          + SIM_ATTACH_PER_DEVICE * nodes * per_node)
         sim_destruct = SIM_DETACH_PER_DEVICE * nodes * per_node
         measured_total = sum(b.values())
-        overhead = out["breakdown"]
         frac = (measured_total - b["run_task"]) / measured_total
         rows.append((
             f"lifecycle/{name}/run_task", b["run_task"] * 1e6,

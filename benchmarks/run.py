@@ -10,41 +10,75 @@
   roofline        —        roofline terms from the dry-run artifacts
   sched_scale     —        acquire latency + jobs/sec vs fleet size
   pipeline_overlap §2/§3   microbatch pipelining vs the serial data plane
+  preempt_frag    §4/§9    preemption time-to-placement + defrag recovery
+
+``--smoke`` runs every module at tiny sizes and never touches the
+committed BENCH_*.json records — the CI fast path (a full run is the
+canonical refresh of the tracked records).
 
 benchmarks/check_regression.py gates a fresh run of the tracked rows
-(sched/acquire, pipeline/overlap) against the committed BENCH_*.json.
+(sched/acquire, pipeline/overlap, preempt/speedup, defrag/...) against
+the committed BENCH_*.json.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
+# tiny per-module kwargs for --smoke: exercise every bench's full code
+# path in seconds (tests/test_bench_smoke.py runs the same shapes)
+SMOKE_KWARGS = {
+    "lifecycle": dict(steps=1, shapes=[("1node-4gpu", 1, 4)]),
+    "amortization": dict(step_sets=(("short_job", 1),)),
+    "disagg_overhead": dict(transfer_mb=1, gemm_dim=64, iters=2),
+    "sched_scale": dict(sizes=(64,), baseline_sizes=(64,), idx_iters=20,
+                        seed_iters=5, n_jobs=8, jobs_pool=32),
+    "pipeline_overlap": dict(stage_counts=(2,), microbatches=(1, 2),
+                             batch=8, compute_s=0.002, iters=1),
+    "preempt_frag": dict(pool_size=256, fill_frac=0.75, small_n=8,
+                         small_dur_s=0.4, big_frac=0.5, attempts=1,
+                         defrag_pool=64, defrag_lease_n=4),
+}
 
-def main() -> None:
+
+def main(argv=None) -> None:
     import os
 
     from benchmarks import (amortization, disagg_overhead, kernels,
-                            lifecycle, pipeline_overlap, roofline, scaling,
-                            sched_scale, sharing)
+                            lifecycle, pipeline_overlap, preempt_frag,
+                            roofline, scaling, sched_scale, sharing)
 
-    # the harness run is the canonical refresh of the tracked records
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[1])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, committed BENCH_*.json untouched")
+    args = ap.parse_args(argv)
+
+    # the full harness run is the canonical refresh of the tracked
+    # records; --smoke leaves them alone
     repo_root = os.path.abspath(os.path.join(
         os.path.dirname(__file__), ".."))
-    bench_sched_json = os.path.join(repo_root, "BENCH_sched.json")
-    bench_pipeline_json = os.path.join(repo_root, "BENCH_pipeline.json")
-    modules = [
-        ("lifecycle", lifecycle.bench),
-        ("amortization", amortization.bench),
-        ("sharing", sharing.bench),
-        ("disagg_overhead", disagg_overhead.bench),
-        ("scaling", scaling.bench),
-        ("kernels", kernels.bench),
-        ("roofline", roofline.bench),
-        ("sched_scale",
-         lambda: sched_scale.bench(json_path=bench_sched_json)),
-        ("pipeline_overlap",
-         lambda: pipeline_overlap.bench(json_path=bench_pipeline_json)),
+    json_for = (dict.fromkeys(
+        ("sched_scale", "pipeline_overlap", "preempt_frag")) if args.smoke
+        else {"sched_scale": os.path.join(repo_root, "BENCH_sched.json"),
+              "pipeline_overlap": os.path.join(repo_root,
+                                               "BENCH_pipeline.json"),
+              "preempt_frag": os.path.join(repo_root,
+                                           "BENCH_preempt.json")})
+    named = [
+        ("lifecycle", lifecycle), ("amortization", amortization),
+        ("sharing", sharing), ("disagg_overhead", disagg_overhead),
+        ("scaling", scaling), ("kernels", kernels),
+        ("roofline", roofline), ("sched_scale", sched_scale),
+        ("pipeline_overlap", pipeline_overlap),
+        ("preempt_frag", preempt_frag),
     ]
+    modules = []
+    for name, mod in named:
+        kwargs = dict(SMOKE_KWARGS.get(name, {})) if args.smoke else {}
+        if name in json_for and json_for[name]:
+            kwargs["json_path"] = json_for[name]
+        modules.append((name, lambda mod=mod, kw=kwargs: mod.bench(**kw)))
     print("name,us_per_call,derived")
     failures = 0
     for name, bench_fn in modules:

@@ -1,3 +1,12 @@
 # Repo-root conftest: its presence makes pytest prepend this directory to
 # sys.path, so `import benchmarks.*` works under a bare `pytest` invocation
 # (not only `python -m pytest`, which prepends the CWD itself).
+
+
+def pytest_configure(config):
+    # CI's tier-1 job runs `-m "not slow"`; the full randomized suites
+    # stay runnable locally with a bare `pytest`.
+    config.addinivalue_line(
+        "markers",
+        "slow: long randomized suites (excluded from CI tier-1 via "
+        '-m "not slow")')

@@ -47,7 +47,8 @@ class CheckpointManager:
                 os.makedirs(tmp, exist_ok=True)
                 leaves, treedef = jax.tree.flatten(host_state)
                 np.savez(os.path.join(tmp, "leaves.npz"),
-                         **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+                         **{f"leaf_{i}": leaf
+                            for i, leaf in enumerate(leaves)})
                 with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
                     pickle.dump(treedef, f)
                 with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -100,6 +101,16 @@ class CheckpointManager:
             state = jax.tree.map(
                 lambda x, s: jax.device_put(x, s), state, shardings)
         return state
+
+    def restore_latest(self, shardings=None, default: Any = None) -> Any:
+        """Restore the newest checkpoint, or ``default`` when none exists.
+        The resume entry point for preempted/relocated tasks (FlowOS-RM
+        requeues them with a fresh slice): a first run starts from
+        ``default``, a re-run picks up the state the preemption saved."""
+        self.wait()
+        if self.latest_step() is None:
+            return default
+        return self.restore(shardings=shardings)
 
     # ------------------------------------------------------------------
     def _gc(self):

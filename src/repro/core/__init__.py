@@ -1,6 +1,7 @@
 from repro.core.pool import DevicePool, Lease, DeviceInfo, AllocationError  # noqa: F401
 from repro.core.slice import Slice, SliceState  # noqa: F401
-from repro.core.job import JobSpec, TaskSpec, JobStatus  # noqa: F401
+from repro.core.job import (JobSpec, TaskSpec, JobStatus,  # noqa: F401
+                            Preempted)
 from repro.core.rm import FlowOSRM  # noqa: F401
 from repro.core.meta_accel import (LinkModel, MetaAccelerator,  # noqa: F401
                                    StageSpec)

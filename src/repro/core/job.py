@@ -16,9 +16,23 @@ class JobStatus(enum.Enum):
     QUEUED = "queued"
     ALLOCATING = "allocating"
     RUNNING = "running"
+    PREEMPTING = "preempting"   # checkpoint + teardown in flight
     DONE = "done"
     FAILED = "failed"
     CANCELLED = "cancelled"
+
+
+class Preempted(Exception):
+    """Raised by a cooperating ``task_fn`` when it observes
+    ``slice.preempt_requested()``: the task has reached a safe point and
+    yields its devices. ``state`` (optional) is a pytree the RM persists
+    through the slice's ``CheckpointManager`` before teardown, so the
+    requeued job can resume from ``step`` instead of from scratch."""
+
+    def __init__(self, state: Any = None, step: int = 0):
+        super().__init__(f"preempted at step {step}")
+        self.state = state
+        self.step = step
 
 
 @dataclasses.dataclass
@@ -30,6 +44,8 @@ class TaskSpec:
     axis_names: Optional[Tuple[str, ...]] = None
     kind: Optional[str] = None          # accelerator kind (meta-accel)
     prefer_contiguous: bool = True      # single-pod best-fit placement
+    priority: int = 0                   # raises the job's effective priority
+    checkpoint_dir: Optional[str] = None  # preemption save/restore root
     arch: Optional[str] = None          # model architecture id
     shape: Optional[str] = None         # input-shape cell name
     steps: int = 0                      # training steps (0 = driver-defined)
@@ -47,20 +63,37 @@ class JobSpec:
     name: str
     tasks: List[TaskSpec]
     priority: int = 0
+    # Cooperative-preemption contract: the job's task_fns poll
+    # slice.preempt_requested() and raise Preempted at safe points. The
+    # RM only ever *asks*; a job that never opts in is never torn down.
+    preemptible: bool = False
+    # Relocatable jobs additionally accept being moved by the idle-time
+    # defragmentation pass (same checkpoint/requeue protocol).
+    relocatable: bool = False
 
     @property
     def n_devices(self) -> int:
         return sum(t.n_devices for t in self.tasks)
 
+    @property
+    def effective_priority(self) -> int:
+        """Job priority: the max of the job-level priority and every
+        task-level priority (a job is as urgent as its hottest task)."""
+        return max([self.priority] + [t.priority for t in self.tasks])
+
     def to_dict(self) -> Dict[str, Any]:
         return {"name": self.name, "priority": self.priority,
+                "preemptible": self.preemptible,
+                "relocatable": self.relocatable,
                 "tasks": [t.to_dict() for t in self.tasks]}
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "JobSpec":
         tasks = [TaskSpec(**t) for t in d["tasks"]]
         return cls(name=d["name"], tasks=tasks,
-                   priority=d.get("priority", 0))
+                   priority=d.get("priority", 0),
+                   preemptible=d.get("preemptible", False),
+                   relocatable=d.get("relocatable", False))
 
 
 @dataclasses.dataclass
@@ -74,15 +107,22 @@ class JobRecord:
     submit_time: float = 0.0
     start_time: Optional[float] = None
     end_time: Optional[float] = None
+    preemptions: int = 0        # completed preempt→requeue round-trips
+    relocations: int = 0        # completed defrag moves
+    preempt_requested: bool = False
+    preempt_reason: str = "preempt"   # or "relocate" (defrag move)
 
     def to_dict(self) -> Dict[str, Any]:
         return {
             "job_id": self.job_id,
             "name": self.spec.name,
             "status": self.status.value,
+            "priority": self.spec.effective_priority,
             "submit_time": self.submit_time,
             "start_time": self.start_time,
             "end_time": self.end_time,
+            "preemptions": self.preemptions,
+            "relocations": self.relocations,
             "error": self.error,
             "breakdowns": [s.breakdown() for s in self.slices],
         }

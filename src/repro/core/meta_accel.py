@@ -30,7 +30,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.pool import DevicePool
+from repro.core.pool import AllocationError, DevicePool
 from repro.core.slice import Slice
 from repro.data.pipeline import PipelineQueue
 
@@ -107,7 +107,7 @@ def concat_microbatches(chunks: Sequence[Any]) -> Any:
         raise ValueError(
             "stage outputs differ in pytree structure across microbatches")
     leaves = [jnp.concatenate(parts, axis=0)
-              for parts in zip(*(l for l, _ in flat))]
+              for parts in zip(*(lv for lv, _ in flat))]
     return jax.tree.unflatten(treedef, leaves)
 
 
@@ -126,6 +126,16 @@ class MetaAccelerator:
         self._totals = {"hops": 0, "bytes": 0, "seconds": 0.0}
 
     def allocate(self, stages: Sequence[StageSpec]) -> List[Slice]:
+        # gang feasibility first (one O(#kinds) index query): a stage set
+        # that cannot co-allocate fails before any attach/rollback churn
+        # against a possibly-shared pool
+        need: Dict[Optional[str], int] = {}
+        for st in stages:
+            need[st.kind] = need.get(st.kind, 0) + st.n_devices
+        if not self.pool.can_allocate_many(need):
+            raise AllocationError(
+                f"meta-accelerator gang infeasible: need {need}, "
+                f"free {self.pool.free_count()}")
         slices = []
         try:
             for st in stages:

@@ -188,6 +188,30 @@ class _FreeRunIndex:
         length, s = best
         return (s, s + length)
 
+    def largest_run(self, kind: Optional[str] = None) -> int:
+        """Length of the largest single-bucket (pod-local) free run."""
+        best = 0
+        for b in self._buckets_for(kind):
+            lens = self._by_len[b]
+            if lens and lens[-1][0] > best:
+                best = lens[-1][0]
+        return best
+
+    def merged_run_size(self, bucket: Bucket, start: int, end: int) -> int:
+        """Size of the free run that would exist in ``bucket`` if
+        [start, end) were freed: the span plus whatever free runs it is
+        adjacent to. The defragmentation pass ranks relocation candidates
+        by this — the lease whose release re-opens the largest run moves
+        first."""
+        runs = self._by_start.get(bucket, [])
+        j = bisect.bisect_left(runs, (start, -1))
+        size = end - start
+        if j > 0 and runs[j - 1][1] == start:
+            size += runs[j - 1][1] - runs[j - 1][0]
+        if j < len(runs) and runs[j][0] == end:
+            size += runs[j][1] - runs[j][0]
+        return size
+
     def snapshot(self) -> Dict[Bucket, List[Run]]:
         """Copy of all buckets' runs (tests / introspection)."""
         return {b: list(runs) for b, runs in self._by_start.items() if runs}
@@ -285,6 +309,50 @@ class DevicePool:
         """Free-run index snapshot: {(pod, kind): [(start, end), ...]}."""
         with self._lock:
             return self._index.snapshot()
+
+    def largest_free_run(self, kind: Optional[str] = None) -> int:
+        """Largest pod-local contiguous free run (placement quality)."""
+        with self._lock:
+            return self._index.largest_run(kind)
+
+    def fragmentation(self, kind: Optional[str] = None) -> float:
+        """Fragmentation metric (DESIGN.md §9): ``1 - largest_free_run /
+        total_free``. 0.0 when every free device sits in one pod-local
+        contiguous run (or nothing is free); approaches 1.0 as the free
+        capacity shatters into many small runs. This is what drives the
+        idle-time compaction pass in FlowOS-RM."""
+        with self._lock:
+            free = self._index.free_count(kind)
+            if free <= 0:
+                return 0.0
+            return 1.0 - self._index.largest_run(kind) / free
+
+    def compaction_candidates(self, kind: Optional[str] = None,
+                              limit: Optional[int] = None) -> List[int]:
+        """Lease ids ranked by how much contiguous capacity their release
+        would re-open (merged-run size desc, then smaller leases first —
+        cheapest moves). Only single-span leases adjacent to at least one
+        free run qualify: a lease with no free neighbours re-opens
+        nothing, and a scattered lease is not a meaningful unit of
+        relocation. FlowOS-RM's defragment() maps these back to
+        relocatable jobs."""
+        with self._lock:
+            scored = []
+            for lease in self._leases.values():
+                devs = sorted(lease.devices, key=lambda d: d.uid)
+                spans = _bucket_spans(devs)
+                if len(spans) != 1:
+                    continue
+                bucket, start, end = spans[0]
+                if kind is not None and bucket[1] != kind:
+                    continue
+                merged = self._index.merged_run_size(bucket, start, end)
+                if merged == end - start:
+                    continue  # no adjacent free run — moving it gains 0
+                scored.append((-merged, end - start, lease.lease_id))
+            scored.sort()
+            ids = [lease_id for _, _, lease_id in scored]
+            return ids[:limit] if limit is not None else ids
 
     def utilization(self) -> float:
         with self._lock:

@@ -2,9 +2,18 @@
 
 Cooperates with a cluster-RM-shaped execution layer (thread-per-job here,
 Mesos in the paper — the contract is identical: co-allocate, then launch
-tasks on slice members). Scheduling is FIFO (paper Fig. 5) with optional
-backfill; every allocation goes through the DevicePool's contiguity-aware
-placement (free-run index, DESIGN.md §3).
+tasks on slice members). Every allocation goes through the DevicePool's
+contiguity-aware placement (free-run index, DESIGN.md §3).
+
+Scheduling policy (DESIGN.md §9): strict-priority pop with anti-starvation
+aging — the queue is ordered by ``effective priority = base priority +
+min(aging_cap, waited / aging_s)``, ties broken FIFO — with gang admission
+(a multi-task job is admitted atomically or not at all), cooperative
+preemption (a high-priority request blocked only by preemptible leases asks
+those jobs to checkpoint and yield), and an idle-time defragmentation pass
+that relocates small leases to re-coalesce large free runs. With every job
+at the default priority the policy degenerates to the seed's FIFO(+optional
+backfill), so the Fig. 5 reproduction is unchanged.
 
 The control loop is **event-driven** (DESIGN.md §4): a ``threading.Condition``
 is notified on job submission, job completion, cancellation, and pool
@@ -21,9 +30,9 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional
 
-from repro.core.job import JobRecord, JobSpec, JobStatus, TaskSpec
+from repro.core.job import JobRecord, JobSpec, JobStatus, Preempted
 from repro.core.pool import AllocationError, DevicePool
 from repro.core.slice import Slice
 
@@ -31,11 +40,28 @@ _TERMINAL = (JobStatus.DONE, JobStatus.FAILED, JobStatus.CANCELLED)
 
 
 class FlowOSRM:
+    # checkpoint-manager factory; a class attribute so scheduler-only
+    # deployments (and tests) can swap it without importing jax up front
+    _ckpt_cls = None
+
     def __init__(self, pool: DevicePool, backfill: bool = False,
-                 simulate_boot_s: float = 0.0):
+                 simulate_boot_s: float = 0.0, *,
+                 preempt: bool = True,
+                 aging_s: float = 30.0, aging_cap: int = 10,
+                 auto_defrag: bool = False, frag_threshold: float = 0.5,
+                 defrag_max_moves: int = 4, relocation_limit: int = 2):
         self.pool = pool
         self.backfill = backfill
         self.simulate_boot_s = simulate_boot_s
+        # policy knobs (DESIGN.md §9)
+        self.preempt = preempt              # allow preempting for priority
+        self.aging_s = aging_s              # seconds per +1 aged priority
+        self.aging_cap = aging_cap          # max aging boost (keeps a real
+                                            # priority gap unbridgeable)
+        self.auto_defrag = auto_defrag      # compaction on idle passes
+        self.frag_threshold = frag_threshold
+        self.defrag_max_moves = defrag_max_moves
+        self.relocation_limit = relocation_limit  # per-job defrag moves
         self._lock = threading.RLock()
         # Wakeup channel for run_until_idle/wait. Deliberately NOT tied to
         # self._lock: _wakeup is invoked from DevicePool's release fan-out,
@@ -102,6 +128,22 @@ class FlowOSRM:
         with self._lock:
             return self._jobs[job_id].to_dict()
 
+    def jobs(self) -> List[dict]:
+        """Status dicts for every job the RM has seen (the REST-like
+        list endpoint; what benchmarks aggregate over)."""
+        with self._lock:
+            return [r.to_dict() for r in self._jobs.values()]
+
+    def quiescent(self) -> bool:
+        """True when no job is queued or mid-preemption (requested or
+        PREEMPTING) — the settle condition defrag/preemption drivers
+        poll between scheduler passes."""
+        with self._lock:
+            return not any(
+                r.preempt_requested
+                or r.status in (JobStatus.QUEUED, JobStatus.PREEMPTING)
+                for r in self._jobs.values())
+
     def cancel(self, job_id: int) -> bool:
         with self._lock:
             rec = self._jobs[job_id]
@@ -120,16 +162,42 @@ class FlowOSRM:
         return self.pool.utilization()
 
     # -- scheduling --------------------------------------------------------
+    def _effective_priority(self, rec: JobRecord, now: float) -> int:
+        """Base priority plus the anti-starvation aging boost: +1 per
+        ``aging_s`` seconds waited, capped at ``aging_cap`` so a base-
+        priority gap wider than the cap is never bridged by waiting (a
+        max-priority job cannot be overtaken by an aged low-priority
+        one)."""
+        boost = 0
+        if self.aging_s > 0:
+            boost = min(self.aging_cap,
+                        int((now - rec.submit_time) / self.aging_s))
+        return rec.spec.effective_priority + boost
+
     def schedule_once(self) -> int:
-        """One FIFO pass; returns number of jobs dispatched."""
+        """One strict-priority pass (aged priority desc, then FIFO);
+        returns number of jobs dispatched. Without backfill the highest-
+        priority blocked job blocks everything behind it; with backfill
+        lower-priority jobs may slip past it into leftover capacity. If
+        the head stays blocked, try to free its capacity by cooperatively
+        preempting lower-priority preemptible jobs."""
         dispatched = 0
         with self._lock:
-            pending = list(self._queue)
+            now = self._now()
+            pending = sorted(
+                self._queue,
+                key=lambda r: (-self._effective_priority(r, now), r.job_id))
+        blocked: Optional[JobRecord] = None
         for rec in pending:
             if self._try_dispatch(rec):
                 dispatched += 1
-            elif not self.backfill:
-                break  # strict FIFO: head-of-line blocks
+                continue
+            if blocked is None and rec.status == JobStatus.QUEUED:
+                blocked = rec
+            if not self.backfill:
+                break  # strict priority: head-of-line blocks
+        if blocked is not None and self.preempt:
+            self._preempt_for(blocked)
         return dispatched
 
     def _try_dispatch(self, rec: JobRecord) -> bool:
@@ -145,6 +213,9 @@ class FlowOSRM:
                 return False
             rec.status = JobStatus.ALLOCATING
             self._queue.remove(rec)
+            # gang admission: all task slices attach under the RM lock or
+            # none do — a shared-pool race that steals capacity mid-gang
+            # rolls the whole job back to QUEUED with every lease returned
             slices = []
             try:
                 for t in rec.spec.tasks:
@@ -172,12 +243,185 @@ class FlowOSRM:
         th.start()
         return True
 
+    # -- cooperative preemption (DESIGN.md §9) -----------------------------
+    def _held_by_kind(self, rec: JobRecord) -> Dict[str, int]:
+        held: Dict[str, int] = {}
+        for s in rec.slices:
+            # snapshot: the job thread nulls s.lease on detach without
+            # taking the RM lock, so a None-check alone races
+            lease = s.lease
+            if lease is not None:
+                for d in lease.devices:
+                    held[d.kind] = held.get(d.kind, 0) + 1
+        return held
+
+    def _preempt_for(self, rec: JobRecord) -> int:
+        """Ask lower-priority preemptible jobs to yield enough capacity to
+        place ``rec``. Preemption rights come from **base** priorities
+        only — aging reorders the queue but never grants the right to
+        tear down a peer, so two equal-priority preemptible jobs can
+        never ping-pong each other. Greedy victim choice: lowest base
+        priority first, then least held (cheapest lost work), skipping
+        victims whose devices cannot reduce any unmet requirement, until
+        the deficit is covered; if even preempting every eligible victim
+        cannot cover it, preempt nothing (tearing jobs down without
+        unblocking anyone is pure waste). Capacity already yielding
+        (victims asked earlier, PREEMPTING jobs mid-teardown) counts
+        toward the deficit so repeated scheduler passes never
+        over-preempt. Returns the number of *new* preemption requests
+        issued."""
+        with self._lock:
+            if rec.status != JobStatus.QUEUED:
+                return 0
+            need: Dict[Optional[str], int] = {}
+            for t in rec.spec.tasks:
+                need[t.kind] = need.get(t.kind, 0) + t.n_devices
+            rbase = rec.spec.effective_priority
+            incoming: Dict[str, int] = {}
+            candidates: List[JobRecord] = []
+            for r in self._jobs.values():
+                if r.status == JobStatus.PREEMPTING or (
+                        r.status == JobStatus.RUNNING
+                        and r.preempt_requested):
+                    for k, n in self._held_by_kind(r).items():
+                        incoming[k] = incoming.get(k, 0) + n
+                elif (r.status == JobStatus.RUNNING and r.spec.preemptible
+                      and r.spec.effective_priority < rbase):
+                    candidates.append(r)
+
+            free = {k: self.pool.free_count(k)
+                    for k in need if k is not None}
+            free_total = self.pool.free_count(None)
+            total_need = sum(need.values())
+
+            def named_unmet(extra: Dict[str, int]) -> List[str]:
+                return [k for k, n in need.items()
+                        if k is not None and (free[k] + incoming.get(k, 0)
+                                              + extra.get(k, 0)) < n]
+
+            def total_unmet(extra: Dict[str, int]) -> bool:
+                supply = (free_total + sum(incoming.values())
+                          + sum(extra.values()))
+                return supply < total_need
+
+            def covered(extra: Dict[str, int]) -> bool:
+                # mirrors DevicePool.can_allocate_many: every named kind
+                # from its own supply, the kind-agnostic remainder from
+                # the total
+                return not named_unmet(extra) and not total_unmet(extra)
+
+            if covered({}):
+                return 0  # enough capacity free or already on its way
+            chosen: List[JobRecord] = []
+            extra: Dict[str, int] = {}
+            candidates.sort(key=lambda r: (
+                r.spec.effective_priority,
+                sum(self._held_by_kind(r).values())))
+            # two passes: victims holding a still-short named kind first
+            # (their devices count toward the total too), then — only if
+            # the total is still short — any-kind victims. This never
+            # sheds a job whose devices cannot reduce the deficit.
+            for named_pass in (True, False):
+                for r in candidates:
+                    if r in chosen:
+                        continue
+                    held = self._held_by_kind(r)
+                    if named_pass:
+                        if not any(held.get(k, 0)
+                                   for k in named_unmet(extra)):
+                            continue
+                    elif not (total_unmet(extra) and sum(held.values())):
+                        continue
+                    chosen.append(r)
+                    for k, n in held.items():
+                        extra[k] = extra.get(k, 0) + n
+                    if covered(extra):
+                        break
+                if covered(extra):
+                    break
+            if not covered(extra):
+                return 0  # cannot unblock even with every victim —
+                          # don't shed work for nothing
+            for r in chosen:
+                self._request_preempt(r, relocate=False)
+            return len(chosen)
+
+    def _request_preempt(self, rec: JobRecord, relocate: bool):
+        rec.preempt_requested = True
+        rec.preempt_reason = "relocate" if relocate else "preempt"
+        for s in rec.slices:
+            s.request_preempt()
+        self._log(rec, f"{rec.preempt_reason}_requested")
+
+    def preempt_job(self, job_id: int) -> bool:
+        """Operator API: ask a running preemptible job to yield."""
+        with self._lock:
+            rec = self._jobs[job_id]
+            if (rec.status != JobStatus.RUNNING or not rec.spec.preemptible
+                    or rec.preempt_requested):
+                return False
+            self._request_preempt(rec, relocate=False)
+        return True
+
+    # -- defragmentation (DESIGN.md §9) ------------------------------------
+    def defragment(self, kind: Optional[str] = None,
+                   max_moves: Optional[int] = None,
+                   frag_threshold: Optional[float] = None) -> int:
+        """Idle-time compaction: when the pool's fragmentation metric
+        exceeds the threshold, ask up to ``max_moves`` relocatable jobs —
+        ranked by how much contiguous capacity their lease's release
+        re-opens — to checkpoint and requeue. Their best-fit re-placement
+        packs them into the smallest holes that fit, re-coalescing large
+        runs. Per-job ``relocation_limit`` bounds churn. Returns the
+        number of relocation requests issued."""
+        max_moves = (self.defrag_max_moves if max_moves is None
+                     else max_moves)
+        threshold = (self.frag_threshold if frag_threshold is None
+                     else frag_threshold)
+        with self._lock:
+            if self.pool.fragmentation(kind) <= threshold:
+                return 0
+            owner: Dict[int, JobRecord] = {}
+            for r in self._jobs.values():
+                if (r.status == JobStatus.RUNNING and r.spec.relocatable
+                        and not r.preempt_requested
+                        and r.relocations < self.relocation_limit):
+                    for s in r.slices:
+                        lease = s.lease   # job thread may null it — snap
+                        if lease is not None:
+                            owner[lease.lease_id] = r
+            moves = 0
+            for lease_id in self.pool.compaction_candidates(kind):
+                r = owner.get(lease_id)
+                if r is None or r.preempt_requested:
+                    continue
+                self._request_preempt(r, relocate=True)
+                moves += 1
+                if moves >= max_moves:
+                    break
+        if moves:
+            self._wakeup()
+        return moves
+
+    # -- job execution -----------------------------------------------------
+    def _checkpoint_manager(self, directory: str):
+        cls = type(self)._ckpt_cls
+        if cls is None:
+            from repro.checkpoint.manager import CheckpointManager
+            cls = CheckpointManager
+        return cls(directory)
+
     def _run_job(self, rec: JobRecord):
+        current: Optional[Slice] = None
+        preempted = False
         try:
             results = []
             for t, s in zip(rec.spec.tasks, rec.slices):
+                current = s
                 s.launch_machine(simulate_boot_s=self.simulate_boot_s)
                 self._log(rec, f"{t.name}:launched")
+                if t.checkpoint_dir is not None and s.ckpt is None:
+                    s.ckpt = self._checkpoint_manager(t.checkpoint_dir)
                 s.prepare_task(t.prepare_fn)
                 self._log(rec, f"{t.name}:prepared")
                 results.append(s.launch_task(t.task_fn))
@@ -186,22 +430,93 @@ class FlowOSRM:
                 s.destroy_machine()
             rec.result = results if len(results) > 1 else results[0]
             rec.status = JobStatus.DONE
+        except Preempted as sig:
+            preempted = True
+            self._requeue_preempted(rec, sig, current)
         except BaseException as e:  # noqa: BLE001 — job isolation
             rec.error = f"{type(e).__name__}: {e}"
             rec.status = JobStatus.FAILED
             for s in rec.slices:
                 if s.lease is not None:
-                    self.pool.release(s.lease)
+                    try:
+                        self.pool.release(s.lease)
+                    except Exception:
+                        pass  # index already saw it / pool poisoned —
+                        # the terminal transition below must still land
                     s.lease = None
         finally:
-            rec.end_time = self._now()
-            self._log(rec, rec.status.value)
+            # the completion wakeup must fire no matter how the cleanup
+            # above went — a FAILED job that never notifies wedges
+            # wait()/run_until_idle for the full timeout
+            if not preempted:
+                # a victim that finished (or died) instead of yielding
+                # must not read as still-yielding: quiescent() and the
+                # preemption deficit accounting both consult this flag
+                rec.preempt_requested = False
+                rec.end_time = self._now()
+                self._log(rec, rec.status.value)
+                self._wakeup()
+
+    def _requeue_preempted(self, rec: JobRecord, sig: Preempted,
+                           active_slice: Optional[Slice]):
+        """checkpoint → teardown → requeue. Any failure along the way
+        (unsaveable state, missing checkpoint config, teardown error) must
+        surface the job as FAILED with its leases released — leaving it
+        PREEMPTING forever would wedge run_until_idle/wait on a condition
+        variable that never signals completion."""
+        with self._lock:
+            relocate = rec.preempt_reason == "relocate"
+            rec.status = JobStatus.PREEMPTING
+            self._log(rec, "preempting")
+        try:
+            if sig.state is not None:
+                if active_slice is None or active_slice.ckpt is None:
+                    raise RuntimeError(
+                        "task yielded checkpoint state but its TaskSpec "
+                        "has no checkpoint_dir")
+                active_slice.ckpt.save(sig.step, sig.state, blocking=True)
+            for s in rec.slices:
+                s.teardown()
+            with self._lock:
+                rec.slices = []
+                rec.preempt_requested = False
+                if relocate:
+                    rec.relocations += 1
+                else:
+                    rec.preemptions += 1
+                # requeue restarts the aging clock: boost accrues from
+                # submit_time, which by now covers the victim's *running*
+                # life — carrying it over would let the victim's aged
+                # priority outrank the (lower-boost, higher-base) job it
+                # just yielded to and reclaim the freed capacity in a
+                # preempt/requeue livelock
+                rec.submit_time = self._now()
+                rec.status = JobStatus.QUEUED
+                self._queue.append(rec)
+                self._log(rec, "relocated" if relocate else "preempted")
+        except BaseException as e:  # noqa: BLE001 — must end terminal
+            for s in rec.slices:
+                if s.lease is not None:
+                    try:
+                        self.pool.release(s.lease)
+                    except Exception:
+                        pass
+                    s.lease = None
+            with self._lock:
+                rec.error = (f"mid-preemption failure: "
+                             f"{type(e).__name__}: {e}")
+                rec.status = JobStatus.FAILED
+                rec.preempt_requested = False
+                rec.end_time = self._now()
+                self._log(rec, "failed")
+        finally:
             self._wakeup()
 
     # -- drive to completion -----------------------------------------------
     def _busy(self) -> bool:
         return bool(self._queue) or any(
-            r.status in (JobStatus.RUNNING, JobStatus.ALLOCATING)
+            r.status in (JobStatus.RUNNING, JobStatus.ALLOCATING,
+                         JobStatus.PREEMPTING)
             for r in self._jobs.values())
 
     def run_until_idle(self, poll_s: Optional[float] = None,
@@ -217,7 +532,11 @@ class FlowOSRM:
         while True:
             with self._wake_cond:
                 seq = self._wake_seq
-            self.schedule_once()
+            dispatched = self.schedule_once()
+            if self.auto_defrag and dispatched == 0:
+                # idle pass: nothing placeable right now — spend the lull
+                # re-coalescing free runs
+                self.defragment()
             with self._lock:
                 busy = self._busy()
             if not busy:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -73,8 +74,17 @@ class Slice:
     executable: Any = None
     timings: Dict[str, float] = dataclasses.field(default_factory=dict)
     events: List[Tuple[float, str]] = dataclasses.field(default_factory=list)
+    # checkpoint handle (repro.checkpoint.manager.CheckpointManager) the RM
+    # attaches when the owning TaskSpec carries a checkpoint_dir; task_fns
+    # use it to restore on (re)start and the RM uses it to persist the
+    # state a Preempted signal yields.
+    ckpt: Any = None
     # (mesh, NamedSharding) cache for replicated_sharding()
     _repl_sharding: Any = dataclasses.field(default=None, repr=False)
+    # cooperative-preemption flag: the RM sets it, the running task polls
+    # it at safe points (a threading.Event so the handoff is race-free)
+    _preempt: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
 
     # ------------------------------------------------------------------
     def _transition(self, op: str, fn: Callable[[], Any]):
@@ -165,6 +175,24 @@ class Slice:
             self.detach_device()
         if self.state == SliceState.DETACHED:
             self.destroy_machine()
+
+    def request_preempt(self):
+        """Ask the task running on this slice to yield at its next safe
+        point (cooperative — nothing is interrupted)."""
+        self._preempt.set()
+
+    def preempt_requested(self) -> bool:
+        """Polled by cooperating task_fns; when True the task should
+        raise ``repro.core.Preempted`` (optionally with its state)."""
+        return self._preempt.is_set()
+
+    def wait_preempt(self, timeout_s: Optional[float] = None) -> bool:
+        """Block until a preemption request lands (or ``timeout_s``
+        passes); returns preempt_requested(). Lets an idle-phase task
+        sleep in C instead of poll-spinning — hundreds of cooperative
+        jobs waiting this way cost no scheduler churn, and the wake is
+        immediate when the RM asks."""
+        return self._preempt.wait(timeout_s)
 
     def replicated_sharding(self):
         """Cached fully-replicated NamedSharding over this slice's mesh.

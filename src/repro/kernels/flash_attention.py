@@ -74,9 +74,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(j == n_kv - 1)
     def _finish():
-        l = l_ref[...][:, 0]
+        lsum = l_ref[...][:, 0]
         o_ref[0, 0] = (acc_ref[...]
-                       / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+                       / jnp.maximum(lsum, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True,

@@ -71,9 +71,10 @@ def run_training(cfg, *, steps: int, batch: int, seq: int,
         from repro.optim.adamw import OptState
         from jax.sharding import PartitionSpec as P
         opt_specs = OptState(step=P(), mu=p_specs, nu=p_specs)
-        as_shard = lambda t: jax.tree.map(
-            lambda s: NamedSharding(mesh, s), t,
-            is_leaf=lambda x: isinstance(x, P))
+        def as_shard(t):
+            return jax.tree.map(
+                lambda s: NamedSharding(mesh, s), t,
+                is_leaf=lambda x: isinstance(x, P))
         state_sharding = S.TrainState(as_shard(p_specs), as_shard(opt_specs))
         jitted = jax.jit(step_fn, in_shardings=(state_sharding, None),
                          donate_argnums=(0,))
@@ -160,7 +161,7 @@ def main():
     total = sum(b.values())
     print(f"[train] {cfg.name}: final loss {out['final_loss']:.4f}, "
           f"{out['steps_per_s']:.2f} steps/s")
-    print(f"[train] lifecycle: " + ", ".join(
+    print("[train] lifecycle: " + ", ".join(
         f"{k}={v:.2f}s" for k, v in b.items()))
     print(f"[train] construction+destruction overhead: "
           f"{(total - b.get('run_task', 0)) / max(total, 1e-9):.1%}")

@@ -249,7 +249,7 @@ def flash_mha(q, k, v, *, causal: bool = True,
 
         @jax.checkpoint
         def kv_step(carry, inp):
-            m, l, acc = carry
+            m, lsum, acc = carry
             kb, vb, j = inp  # (B,bkv,Hkv,D), (B,bkv,Hkv,D), ()
             s = jnp.einsum("bskgd,btkd->bkgst", qb, kb,
                            preferred_element_type=jnp.float32) * scale
@@ -262,11 +262,11 @@ def flash_mha(q, k, v, *, causal: bool = True,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + jnp.sum(p, axis=-1)
+            lsum = lsum * corr + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(q.dtype), vb,
                             preferred_element_type=jnp.float32)
             acc = acc * corr[..., None] + pv
-            return (m_new, l, acc), None
+            return (m_new, lsum, acc), None
 
         m0 = jnp.full((B, Hkv, G, bq), -1e30, jnp.float32)
         l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
@@ -290,9 +290,9 @@ def flash_mha(q, k, v, *, causal: bool = True,
                     new_carry)
             return new_carry, None
 
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lsum, acc), _ = jax.lax.scan(
             body, (m0, l0, a0), (ks_, vs_, jnp.arange(nkv)))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return out.astype(q.dtype)  # (B, Hkv, G, bq, D)
 
     blocks = jax.lax.map(one_q_block, jnp.arange(nq))  # (nq,B,Hkv,G,bq,D)
@@ -656,7 +656,6 @@ def _moe_inner_dsharded(cfg: ModelConfig, xt, router, wg, wu, wd,
     T, d = xt.shape
     E_loc = wg.shape[0]
     d_shard = wg.shape[1]
-    n_shard = d // d_shard
     dt = xt.dtype
     C = capacity
 
@@ -745,7 +744,6 @@ def moe(params, cfg: ModelConfig, x):
     C = _capacity(cfg, T_loc)
     E_loc = E // n_ep
 
-    w_spec = P(ep_axis, fsdp_axis, None)
     x_spec = P(batch_axis, None, None)
 
     def sharded_moe(xb, router, wg, wu, wd):
@@ -782,7 +780,6 @@ def moe(params, cfg: ModelConfig, x):
                   P(ep_axis, None, fsdp_axis) if fsdp_axis else P(ep_axis, None, None)),
         out_specs=(x_spec, P()),
         **{no_check: False})
-    del w_spec
     out, aux = fn(x, params["router"], params["wg"], params["wu"],
                   params["wd"])
     return out, aux

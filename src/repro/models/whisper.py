@@ -126,7 +126,8 @@ def apply_hidden(cfg: ModelConfig, params, batch):
     x = shard(x, "batch", "seq", "act_embed")
 
     def _body(x, p):
-        fn = lambda xx, pp: _dec_layer(cfg, xx, pp, enc_out)
+        def fn(xx, pp):
+            return _dec_layer(cfg, xx, pp, enc_out)
         if cfg.remat in ("dots", "full"):
             fn = jax.checkpoint(fn)
         return fn(x, p), None
@@ -185,7 +186,6 @@ def prefill_cross(cfg: ModelConfig, params, frames):
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens):
-    B = tokens.shape[0]
     idx = cache["self"]["len"][0, 0]
     x = L.embed(params["embed"], cfg, tokens)
     x = x + jnp.take(params["pos_embed"], jnp.full((1,), idx),

@@ -28,8 +28,9 @@ class AdamW:
         self.schedule = schedule
 
     def init(self, params) -> OptState:
-        zeros = lambda t: jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        def zeros(t):
+            return jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), t)
         return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params),
                         nu=zeros(params))
 
@@ -73,5 +74,5 @@ class AdamW:
 
 def global_norm(tree) -> jax.Array:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))

@@ -69,10 +69,10 @@ def make_train_step(model: Model, optimizer: AdamW, rules: AxisRules,
 
             def acc_body(carry, mb):
                 g_acc, l_acc, a_acc = carry
-                g, (l, a) = loss_and_grad(state.params, mb)
+                g, (loss_mb, a) = loss_and_grad(state.params, mb)
                 g_acc = jax.tree.map(
                     lambda x, y: x + y.astype(jnp.float32), g_acc, g)
-                return (g_acc, l_acc + l, a_acc + a), None
+                return (g_acc, l_acc + loss_mb, a_acc + a), None
 
             g0 = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
@@ -181,9 +181,11 @@ def input_specs(model: Model, shape: ShapeConfig, rules: AxisRules):
     """
     cfg = model.cfg
     mesh = rules.mesh
-    as_shard = lambda tree: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), tree,
-        is_leaf=lambda x: isinstance(x, P))
+
+    def as_shard(tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
 
     p_struct = params_struct(model)
     p_specs, opt_specs = state_specs(model, rules)

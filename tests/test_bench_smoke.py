@@ -9,28 +9,28 @@ import benchmarks.disagg_overhead as disagg_overhead
 import benchmarks.kernels as kernels
 import benchmarks.lifecycle as lifecycle
 import benchmarks.pipeline_overlap as pipeline_overlap
+import benchmarks.preempt_frag as preempt_frag
 import benchmarks.roofline as roofline
+import benchmarks.run as bench_run
 import benchmarks.scaling as scaling
 import benchmarks.sched_scale as sched_scale
 import benchmarks.sharing as sharing
 
+# one source of truth for the smoke shapes: benchmarks/run.py --smoke
+# runs these exact kwargs in CI, and TINY below is built from them
+TINY_PREEMPT = bench_run.SMOKE_KWARGS["preempt_frag"]
+
 TINY = [
-    ("lifecycle", lambda: lifecycle.bench(
-        steps=1, shapes=[("1node-4gpu", 1, 4)])),
-    ("amortization", lambda: amortization.bench(
-        step_sets=(("short_job", 1),))),
-    ("sharing", lambda: sharing.bench()),
-    ("disagg_overhead", lambda: disagg_overhead.bench(
-        transfer_mb=1, gemm_dim=64, iters=2)),
-    ("scaling", lambda: scaling.bench()),
-    ("kernels", lambda: kernels.bench()),
-    ("roofline", lambda: roofline.bench()),
-    ("sched_scale", lambda: sched_scale.bench(
-        sizes=(64,), baseline_sizes=(64,), idx_iters=20, seed_iters=5,
-        n_jobs=8, jobs_pool=32)),
-    ("pipeline_overlap", lambda: pipeline_overlap.bench(
-        stage_counts=(2,), microbatches=(1, 2), batch=8,
-        compute_s=0.002, iters=1)),
+    (name, lambda m=mod, kw=bench_run.SMOKE_KWARGS.get(name, {}):
+        m.bench(**dict(kw)))
+    for name, mod in [
+        ("lifecycle", lifecycle), ("amortization", amortization),
+        ("sharing", sharing), ("disagg_overhead", disagg_overhead),
+        ("scaling", scaling), ("kernels", kernels),
+        ("roofline", roofline), ("sched_scale", sched_scale),
+        ("pipeline_overlap", pipeline_overlap),
+        ("preempt_frag", preempt_frag),
+    ]
 ]
 
 
@@ -113,8 +113,15 @@ def test_check_regression_committed_records_parse():
     committed = check_regression.load_committed()
     assert any(k.startswith("sched/acquire") for k in committed)
     assert any(k.startswith("pipeline/overlap") for k in committed)
+    assert any(k.startswith("preempt/speedup") for k in committed)
+    assert any(k.startswith("defrag/largest_run_ratio") for k in committed)
     for name, (value, direction) in committed.items():
         assert value > 0 and direction in ("lower", "higher"), name
+    # acceptance floor: the committed preemption record must show the
+    # large job placing >=10x sooner than the FIFO baseline
+    for name, (value, _) in committed.items():
+        if name.startswith("preempt/speedup"):
+            assert value >= 10.0, f"{name} committed below 10x: {value}"
 
 
 def test_check_regression_gate_smoke():
@@ -126,7 +133,8 @@ def test_check_regression_gate_smoke():
         sched_kwargs=dict(sizes=(1000,), baseline_sizes=(), idx_iters=50,
                           n_jobs=8, jobs_pool=64),
         pipe_kwargs=dict(stage_counts=(4,), microbatches=(1, 8),
-                         compute_s=0.005, iters=1))
+                         compute_s=0.005, iters=1),
+        preempt_kwargs=TINY_PREEMPT)
     assert fails == [], f"gate smoke failed: {fails}"
 
 
@@ -138,5 +146,6 @@ def test_check_regression_fails_loud_without_records(tmp_path):
         sched_kwargs=dict(sizes=(64,), baseline_sizes=(), idx_iters=10,
                           n_jobs=4, jobs_pool=16),
         pipe_kwargs=dict(stage_counts=(2,), microbatches=(1, 2),
-                         batch=8, compute_s=0.002, iters=1))
+                         batch=8, compute_s=0.002, iters=1),
+        preempt_kwargs=TINY_PREEMPT)
     assert len(fails) == 1 and "no gated rows" in fails[0]

@@ -72,7 +72,7 @@ def test_train_step_decreases_loss(mod_name):
         for _ in range(5):
             state, metrics = step(state, batch)
             losses.append(float(metrics["loss"]))
-    assert all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x) for x in losses)
     assert losses[-1] < losses[0]  # same batch -> must overfit
 
 

@@ -117,7 +117,6 @@ def test_policy_long_context_sp():
 
 def test_moe_ep_matches_local():
     """Expert-parallel shard_map MoE == local MoE on a 1-device mesh."""
-    import jax.numpy as jnp
     from repro.models import layers as L
     from repro.parallel.sharding import axis_rules
     from repro.launch.mesh import single_device_mesh

@@ -66,7 +66,14 @@ def make_pool(rng):
         devices_per_pod=rng.choice([8, 16, 256]), kinds=kinds)
 
 
-@pytest.mark.parametrize("seed", range(500))
+# first N seeds run everywhere; the long tail is tier-1-local / nightly
+# (CI runs -m "not slow")
+def _seeds(n, fast=40):
+    return [s if s < fast else pytest.param(s, marks=pytest.mark.slow)
+            for s in range(n)]
+
+
+@pytest.mark.parametrize("seed", _seeds(500))
 def test_index_matches_brute_force(seed):
     rng = random.Random(seed)
     pool = make_pool(rng)
@@ -99,7 +106,7 @@ def test_index_matches_brute_force(seed):
         check_index(pool)
 
 
-@pytest.mark.parametrize("seed", range(120))
+@pytest.mark.parametrize("seed", _seeds(120))
 def test_best_fit_stays_single_pod_when_possible(seed):
     """If any single-(pod, kind) run can serve the request, the chosen
     placement must not span pods."""
@@ -169,3 +176,90 @@ def test_mark_failed_is_idempotent():
     pool.mark_repaired([2, 3])
     check_index(pool)
     assert pool.free_count() == 8
+
+
+# ---------------------------------------------------------------------------
+# fragmentation metric + compaction candidates (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def brute_force_largest_run(pool, kind=None):
+    return max((end - start
+                for (pod, k), runs in brute_force_runs(pool).items()
+                if kind is None or k == kind
+                for start, end in runs), default=0)
+
+
+@pytest.mark.parametrize("seed", _seeds(80, fast=25))
+def test_fragmentation_matches_brute_force(seed):
+    """fragmentation() must equal 1 - largest_run/free recomputed from
+    raw device state, at every step of a random acquire/release walk."""
+    rng = random.Random(20_000 + seed)
+    pool = make_pool(rng)
+    leases = []
+    for _ in range(25):
+        if leases and rng.random() < 0.45:
+            pool.release(leases.pop(rng.randrange(len(leases))))
+        else:
+            kind = rng.choice([None, "tpu", "gpu"])
+            free = pool.free_count(kind)
+            if free:
+                leases.append(pool.acquire(rng.randint(1, free),
+                                           kind=kind))
+        for kind in (None, "tpu", "gpu", "fpga"):
+            largest = brute_force_largest_run(pool, kind)
+            free = pool.free_count(kind)
+            assert pool.largest_free_run(kind) == largest
+            expect = 0.0 if free == 0 else 1.0 - largest / free
+            assert pool.fragmentation(kind) == pytest.approx(expect)
+
+
+@pytest.mark.parametrize("seed", _seeds(60, fast=20))
+def test_compaction_candidates_are_sound(seed):
+    """Every candidate must be a live single-span lease adjacent to free
+    capacity, ranked by merged-run size desc — and releasing the top
+    candidate must actually produce a free run of exactly that size."""
+    rng = random.Random(30_000 + seed)
+    pool = DevicePool.virtual(64, devices_per_pod=64)
+    leases = {}
+    for _ in range(40):
+        if leases and rng.random() < 0.5:
+            uid = rng.choice(list(leases))
+            pool.release(leases.pop(uid))
+        else:
+            n = rng.choice([1, 2, 4])
+            if pool.free_count() >= n:
+                lease = pool.acquire(n)
+                leases[lease.lease_id] = lease
+    cands = pool.compaction_candidates()
+    merged_sizes = []
+    for lease_id in cands:
+        assert lease_id in leases
+        lease = leases[lease_id]
+        uids = sorted(d.uid for d in lease.devices)
+        assert uids == list(range(uids[0], uids[-1] + 1)), "multi-span"
+        bucket = (lease.devices[0].pod, lease.devices[0].kind)
+        merged = pool._index.merged_run_size(bucket, uids[0],
+                                             uids[-1] + 1)
+        assert merged > len(uids), "candidate with no free neighbour"
+        merged_sizes.append(merged)
+    assert merged_sizes == sorted(merged_sizes, reverse=True)
+    if cands:
+        top = leases.pop(cands[0])
+        expect = merged_sizes[0]
+        pool.release(top)
+        check_index(pool)
+        runs = [r for rs in pool.free_runs().values() for r in rs]
+        assert any(end - start == expect for start, end in runs), (
+            f"no merged run of size {expect} after releasing top "
+            f"candidate; runs={runs}")
+
+
+def test_compaction_candidates_kind_filter():
+    pool = DevicePool.virtual(16, devices_per_pod=16,
+                              kinds={(0, 8): "gpu", (8, 16): "tpu"})
+    a = pool.acquire(2, kind="gpu")
+    b = pool.acquire(2, kind="tpu")
+    gpu_cands = pool.compaction_candidates(kind="gpu")
+    assert gpu_cands == [a.lease_id]
+    assert b.lease_id in pool.compaction_candidates()
+    assert b.lease_id not in gpu_cands

@@ -1,0 +1,552 @@
+"""Scheduling policy layer (DESIGN.md §9): strict-priority pop with
+anti-starvation aging, gang-admission atomicity under a shared pool,
+cooperative preemption (checkpoint → teardown → requeue → restore), the
+mid-preemption-death FAILED guarantee, and defragmentation."""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import (DevicePool, FlowOSRM, JobSpec, Preempted, TaskSpec)
+from repro.core.job import JobStatus
+
+
+def _sleep_job(name, n, dur=0.02, priority=0):
+    return JobSpec(name=name, priority=priority, tasks=[TaskSpec(
+        name="t", n_devices=n, task_fn=lambda s: time.sleep(dur))])
+
+
+def _coop_task(stop, result=None, poll_s=0.002):
+    """Cooperative task: blocks on the slice's preempt event, yields via
+    Preempted, returns ``result`` once ``stop`` fires."""
+    def task(s):
+        while not stop.is_set():
+            if s.wait_preempt(poll_s):
+                raise Preempted()
+        return result
+    return task
+
+
+# ---------------------------------------------------------------------------
+# priority + aging
+# ---------------------------------------------------------------------------
+
+def test_priority_pop_beats_fifo_order():
+    """With the pool busy, a later-submitted high-priority job must start
+    before an earlier low-priority one once capacity frees."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool)
+    blocker = rm.submit(_sleep_job("blocker", 8, 0.05))
+    rm.schedule_once()
+    lo = rm.submit(_sleep_job("lo", 8, 0.0))
+    hi = rm.submit(_sleep_job("hi", 8, 0.0, priority=5))
+    rm.run_until_idle()
+    ids = (blocker, lo, hi)
+    assert all(rm.status(i)["status"] == "done" for i in ids)
+    assert (rm.status(hi)["start_time"] < rm.status(lo)["start_time"])
+
+
+def test_task_priority_raises_job_priority():
+    spec = JobSpec(name="j", priority=1, tasks=[
+        TaskSpec(name="a", n_devices=1, priority=7),
+        TaskSpec(name="b", n_devices=1)])
+    assert spec.effective_priority == 7
+    spec2 = JobSpec.from_dict(spec.to_dict())
+    assert spec2.effective_priority == 7
+    assert spec2.preemptible is False
+
+
+def test_aging_unblocks_starved_job():
+    """A low-priority job that has waited >= aging_s * gap must outrank a
+    fresh higher-base-priority job (anti-starvation)."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool, aging_s=0.02, aging_cap=10)
+    blocker = rm.submit(_sleep_job("blocker", 8, 0.3))
+    rm.schedule_once()
+    old_lo = rm.submit(_sleep_job("old_lo", 8, 0.0))
+    time.sleep(0.25)  # old_lo ages ~10 levels (capped)
+    fresh_mid = rm.submit(_sleep_job("fresh_mid", 8, 0.0, priority=3))
+    rm.run_until_idle()
+    assert (rm.status(old_lo)["start_time"]
+            < rm.status(fresh_mid)["start_time"])
+    assert rm.status(blocker)["status"] == "done"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_max_priority_places_within_k_completions(seed):
+    """Starvation property: a max-priority job (base gap > aging_cap, so
+    no amount of waiting bridges it) must place before ANY lower-priority
+    job that was still queued when it arrived — i.e. within at most
+    pool/width completions of the already-running set."""
+    rng = random.Random(seed)
+    pool = DevicePool.virtual(16)
+    rm = FlowOSRM(pool, aging_s=0.005, aging_cap=10)
+    small = [rm.submit(_sleep_job(f"s{i}", 4, rng.uniform(0.005, 0.03)))
+             for i in range(12)]
+    rm.schedule_once()          # 4 smalls start; 8 queued
+    top = rm.submit(_sleep_job("top", 16, 0.0, priority=100))
+    rm.run_until_idle()
+    assert all(rm.status(i)["status"] == "done" for i in small + [top])
+    top_submit = rm.status(top)["submit_time"]
+    top_start = rm.status(top)["start_time"]
+    late_small_starts = [
+        rm.status(i)["start_time"] for i in small
+        if rm.status(i)["start_time"] > top_submit]
+    # every small that started after top arrived must have started after
+    # top did (top is never overtaken) -> top placed within the <=4
+    # completions of the smalls that were already running
+    assert all(st >= top_start for st in late_small_starts), (
+        f"seed={seed}: max-priority job was overtaken")
+
+
+# ---------------------------------------------------------------------------
+# gang admission
+# ---------------------------------------------------------------------------
+
+def test_gang_admission_atomic_under_two_rms():
+    """Two RMs race for one 8-device pool with 2-task gangs: a RUNNING
+    job must always hold every task lease (sampled under the RM lock),
+    and the rollback path must leak nothing."""
+    pool = DevicePool.virtual(8)
+    rms = [FlowOSRM(pool), FlowOSRM(pool)]
+    violations = []
+    stop_mon = threading.Event()
+
+    def monitor():
+        # a RUNNING job must have been admitted whole: one slice per task
+        # (each slice releases its lease as its task completes, so lease
+        # presence is not the invariant — slice-set completeness is), and
+        # an ALLOCATING job must never be visible at all, since gang
+        # admission commits or rolls back entirely under the RM lock
+        while not stop_mon.is_set():
+            for rm in rms:
+                with rm._lock:
+                    for r in rm._jobs.values():
+                        if (r.status == JobStatus.RUNNING
+                                and len(r.slices) != len(r.spec.tasks)):
+                            violations.append(("partial", r.spec.name))
+                        if r.status == JobStatus.ALLOCATING:
+                            violations.append(("allocating", r.spec.name))
+            time.sleep(0.001)
+
+    mon = threading.Thread(target=monitor, daemon=True)
+    mon.start()
+
+    def drive(rm, tag):
+        specs = [JobSpec(name=f"{tag}{i}", tasks=[
+            TaskSpec(name="a", n_devices=3,
+                     task_fn=lambda s: time.sleep(0.001)),
+            TaskSpec(name="b", n_devices=3,
+                     task_fn=lambda s: time.sleep(0.001)),
+        ]) for i in range(12)]
+        rm.submit_many(specs)
+        rm.run_until_idle(timeout_s=60)
+
+    threads = [threading.Thread(target=drive, args=(rm, tag), daemon=True)
+               for rm, tag in zip(rms, "AB")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=90)
+    stop_mon.set()
+    mon.join(timeout=5)
+    assert not any(t.is_alive() for t in threads), "cross-RM deadlock"
+    assert violations == [], f"partial gangs observed RUNNING: {violations}"
+    for rm in rms:
+        assert all(r.status == JobStatus.DONE for r in rm._jobs.values())
+        rm.close()
+    assert pool.utilization() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# cooperative preemption
+# ---------------------------------------------------------------------------
+
+def test_preemption_end_to_end_with_checkpoint(tmp_path):
+    """High-priority arrival preempts a low-priority preemptible job; the
+    victim checkpoints, requeues, and resumes from its saved step."""
+    pool = DevicePool.virtual(16)
+    rm = FlowOSRM(pool)
+    starts = []
+
+    def victim_task(s):
+        state = s.ckpt.restore_latest(default={"i": 0})
+        i = int(state["i"])
+        starts.append(i)
+        while i < 30:
+            if s.wait_preempt(0.002):
+                raise Preempted(state={"i": i}, step=i)
+            i += 1
+        return i
+
+    victim = rm.submit(JobSpec(name="victim", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=16, checkpoint_dir=str(tmp_path),
+                 task_fn=victim_task)]))
+    rm.schedule_once()
+    time.sleep(0.02)  # let the victim make progress past step 0
+    hi = rm.submit(JobSpec(name="hi", priority=50, tasks=[
+        TaskSpec(name="t", n_devices=16, task_fn=lambda s: "done")]))
+    rec_hi = rm.wait(hi, timeout_s=30)
+    assert rec_hi.status == JobStatus.DONE
+    # bounded time-to-placement: preemption, not victim completion
+    assert rec_hi.start_time - rec_hi.submit_time < 5.0
+    rm.run_until_idle(timeout_s=30)
+    st = rm.status(victim)
+    assert st["status"] == "done"
+    assert st["preemptions"] == 1
+    assert len(starts) == 2 and starts[0] == 0 and starts[1] > 0, starts
+    assert pool.utilization() == 0.0
+    kinds = [e[2] for e in rm.events if e[1] == "victim"]
+    for ev in ("preempt_requested", "preempting", "preempted"):
+        assert ev in kinds
+    rm.close()
+
+
+def test_preemption_never_touches_non_preemptible():
+    """A high-priority job blocked only by non-preemptible leases must
+    wait for normal completion — no preempt request is ever issued."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool)
+    lo = rm.submit(_sleep_job("lo", 8, 0.05))
+    rm.schedule_once()
+    hi = rm.submit(_sleep_job("hi", 8, 0.0, priority=99))
+    rm.run_until_idle()
+    assert rm.status(lo)["status"] == "done"
+    assert rm.status(lo)["preemptions"] == 0
+    assert not any(e[2] == "preempt_requested" for e in rm.events)
+    assert rm.status(hi)["start_time"] >= rm.status(lo)["end_time"] - 0.02
+
+
+def test_no_preemption_when_it_cannot_unblock():
+    """If even preempting every eligible victim cannot cover the deficit,
+    nothing is preempted (shedding work without unblocking is waste)."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool)
+    stop = threading.Event()
+    coop = rm.submit(JobSpec(name="coop", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=2, task_fn=_coop_task(stop))]))
+    hard = rm.submit(_sleep_job("hard", 6, 0.08))
+    rm.schedule_once()
+    # needs 10 > 8 total: never placeable; preempting coop gains nothing
+    huge = rm.submit(_sleep_job("huge", 10, 0.0, priority=99))
+    with pytest.raises(TimeoutError):
+        rm.run_until_idle(timeout_s=0.3)
+    assert rm.status(coop)["status"] == "running"
+    assert not any(e[2] == "preempt_requested" for e in rm.events)
+    assert rm.cancel(huge)
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    assert rm.status(coop)["status"] == "done"
+    assert rm.status(hard)["status"] == "done"
+    rm.close()
+
+
+def test_equal_priority_jobs_never_preempt_each_other():
+    """Aging orders the queue but never grants preemption rights: a
+    queued equal-base-priority job must not preempt a running peer no
+    matter how long it has aged (else requeue ping-pong livelock)."""
+    pool = DevicePool.virtual(4)
+    rm = FlowOSRM(pool, aging_s=0.01, aging_cap=10)
+    stop = threading.Event()
+    a = rm.submit(JobSpec(name="a", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, task_fn=_coop_task(stop, "a"))]))
+    rm.schedule_once()
+    rm.submit(JobSpec(name="b", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, task_fn=_coop_task(stop, "b"))]))
+    time.sleep(0.15)   # b ages far past a's base priority
+    rm.schedule_once()
+    assert not any(e[2] == "preempt_requested" for e in rm.events)
+    assert rm.status(a)["status"] == "running"
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    assert all(j["preemptions"] == 0 for j in rm.jobs())
+    rm.close()
+
+
+def test_preemption_skips_victims_of_useless_kind():
+    """Victim choice must not shed jobs whose devices cannot reduce the
+    blocked job's deficit: a tpu-holding preemptible job is left alone
+    when the deficit is gpu-only and a gpu victim suffices."""
+    pool = DevicePool.virtual(16, kinds={(0, 8): "gpu", (8, 16): "tpu"})
+    rm = FlowOSRM(pool)
+    stop = threading.Event()
+    tpu_job = rm.submit(JobSpec(name="tpu_j", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, kind="tpu",
+                 task_fn=_coop_task(stop, "t"))]))
+    gpu_job = rm.submit(JobSpec(name="gpu_j", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=8, kind="gpu",
+                 task_fn=_coop_task(stop, "g"))]))
+    rm.schedule_once()
+    hi = rm.submit(JobSpec(name="hi", priority=10, tasks=[
+        TaskSpec(name="t", n_devices=8, kind="gpu",
+                 task_fn=lambda s: None)]))
+    rec = rm.wait(hi, timeout_s=30)
+    assert rec.status == JobStatus.DONE
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    # the tpu job (sorts first: fewer held) contributes nothing to the
+    # gpu deficit and must never have been asked to yield
+    assert rm.status(tpu_job)["preemptions"] == 0
+    assert rm.status(gpu_job)["preemptions"] == 1
+    rm.close()
+
+
+def test_mid_preemption_death_surfaces_failed_not_hang():
+    """Satellite fix: a job that dies mid-preemption (here: it yields
+    checkpoint state but has no checkpoint_dir to save it to) must end
+    FAILED with leases released — wait()/run_until_idle() must return,
+    not wedge on a condition variable that never fires."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool)
+
+    def bad_task(s):
+        while True:
+            if s.wait_preempt(0.002):
+                raise Preempted(state={"x": 1})  # no checkpoint_dir
+
+    bad = rm.submit(JobSpec(name="bad", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=8, task_fn=bad_task)]))
+    rm.schedule_once()
+    hi = rm.submit(_sleep_job("hi", 8, 0.0, priority=9))
+    rec = rm.wait(hi, timeout_s=30)
+    assert rec.status == JobStatus.DONE
+    rm.run_until_idle(timeout_s=30)   # must NOT hang on the dead job
+    st = rm.status(bad)
+    assert st["status"] == "failed"
+    assert "mid-preemption" in st["error"]
+    assert st["end_time"] is not None
+    assert pool.utilization() == 0.0
+    rm.close()
+
+
+def test_mid_preemption_unsaveable_state_fails(tmp_path):
+    """Same guarantee when the checkpoint write itself explodes."""
+    class Unsaveable:
+        def __array__(self, *a, **k):
+            raise RuntimeError("cannot snapshot")
+
+    pool = DevicePool.virtual(4)
+    rm = FlowOSRM(pool)
+
+    def bad_task(s):
+        while True:
+            if s.wait_preempt(0.002):
+                raise Preempted(state={"x": Unsaveable()})
+
+    bad = rm.submit(JobSpec(name="bad", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, checkpoint_dir=str(tmp_path),
+                 task_fn=bad_task)]))
+    rm.schedule_once()
+    rm.submit(_sleep_job("hi", 4, 0.0, priority=9))
+    rm.run_until_idle(timeout_s=30)
+    st = rm.status(bad)
+    assert st["status"] == "failed" and "mid-preemption" in st["error"]
+    assert pool.utilization() == 0.0
+    rm.close()
+
+
+def test_preempted_victim_does_not_outrank_its_preemptor():
+    """Requeue restarts the aging clock: a long-RUNNING victim must not
+    come back with a stale aging boost that outranks the higher-base job
+    it just yielded to (preempt/requeue livelock). Exactly one
+    preemption may occur."""
+    pool = DevicePool.virtual(8)
+    rm = FlowOSRM(pool, aging_s=0.01, aging_cap=10)
+    stop = threading.Event()
+    v = rm.submit(JobSpec(name="v", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=8, task_fn=_coop_task(stop, "v"))]))
+    rm.schedule_once()
+    time.sleep(0.15)    # victim alive >> aging_s * aging_cap
+    hi = rm.submit(_sleep_job("hi", 8, 0.02, priority=5))
+    rec = rm.wait(hi, timeout_s=20)
+    assert rec.status == JobStatus.DONE
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    assert rm.status(v)["status"] == "done"
+    assert rm.status(v)["preemptions"] == 1, (
+        "victim bounced: stale aging boost reclaimed the freed capacity")
+    rm.close()
+
+
+def test_preempt_requested_clears_when_victim_finishes_anyway():
+    """A victim that completes on its own instead of yielding must not
+    read as still-yielding afterwards: quiescent() (and the preemption
+    deficit accounting) consult the flag."""
+    pool = DevicePool.virtual(4)
+    rm = FlowOSRM(pool)
+    ev = threading.Event()
+
+    def oblivious(s):
+        ev.wait(10)     # never checks preempt_requested
+        return "done"
+
+    j = rm.submit(JobSpec(name="j", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, task_fn=oblivious)]))
+    rm.schedule_once()
+    assert rm.preempt_job(j)
+    ev.set()
+    rm.run_until_idle(timeout_s=30)
+    assert rm.status(j)["status"] == "done"
+    assert rm.quiescent(), "finished victim still reads as yielding"
+    rm.close()
+
+
+def test_operator_preempt_job_api():
+    pool = DevicePool.virtual(4)
+    rm = FlowOSRM(pool)
+    stop = threading.Event()
+    j = rm.submit(JobSpec(name="j", preemptible=True, tasks=[
+        TaskSpec(name="t", n_devices=4, task_fn=_coop_task(stop, "ok"))]))
+    rm.schedule_once()
+    assert rm.preempt_job(j)
+    assert not rm.preempt_job(j)  # already requested
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    assert rm.status(j)["status"] == "done"
+    assert rm.status(j)["preemptions"] == 1
+    rm.close()
+
+
+# ---------------------------------------------------------------------------
+# defragmentation
+# ---------------------------------------------------------------------------
+
+def _checkerboard(pool_size, lease_n, stop, go, relocatable=True):
+    """Alternating held (relocatable) / released leases."""
+    specs = []
+    for i in range(pool_size // lease_n):
+        if i % 2 == 0:
+            specs.append(JobSpec(
+                name=f"keep{i}", preemptible=True, relocatable=relocatable,
+                tasks=[TaskSpec(name="t", n_devices=lease_n,
+                                task_fn=_coop_task(stop))]))
+        else:
+            specs.append(JobSpec(name=f"gap{i}", tasks=[
+                TaskSpec(name="t", n_devices=lease_n,
+                         task_fn=lambda s: go.wait(30))]))
+    return specs
+
+
+def _drive_defrag(rm, pool, rounds=32, **kw):
+    moves = 0
+    for _ in range(rounds):
+        m = rm.defragment(**kw)
+        moves += m
+        deadline = time.perf_counter() + 5
+        while time.perf_counter() < deadline:
+            rm.schedule_once()
+            if rm.quiescent():
+                break
+            time.sleep(0.002)
+        if m == 0:
+            break
+    return moves
+
+
+def test_defragment_recoalesces_checkerboard():
+    pool = DevicePool.virtual(64, devices_per_pod=64)
+    rm = FlowOSRM(pool, relocation_limit=8)
+    stop, go = threading.Event(), threading.Event()
+    ids = rm.submit_many(_checkerboard(64, 4, stop, go))
+    rm.schedule_once()
+    go.set()
+    deadline = time.perf_counter() + 5
+    while time.perf_counter() < deadline:
+        if all(rm.status(i)["status"] == "done" for i in ids[1::2]):
+            break
+        time.sleep(0.002)
+    frag0, largest0 = pool.fragmentation(), pool.largest_free_run()
+    assert frag0 > 0.5 and largest0 == 4
+    moves = _drive_defrag(rm, pool, max_moves=4, frag_threshold=0.2)
+    assert moves > 0
+    assert pool.largest_free_run() >= 4 * largest0
+    assert pool.fragmentation() < frag0
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    assert pool.utilization() == 0.0
+    rm.close()
+
+
+def test_defragment_skips_non_relocatable():
+    pool = DevicePool.virtual(32, devices_per_pod=32)
+    rm = FlowOSRM(pool)
+    stop, go = threading.Event(), threading.Event()
+    rm.submit_many(_checkerboard(32, 4, stop, go, relocatable=False))
+    rm.schedule_once()
+    go.set()
+    time.sleep(0.05)
+    assert pool.fragmentation() > 0.5
+    assert rm.defragment(max_moves=8, frag_threshold=0.2) == 0
+    assert not any(e[2] == "relocate_requested" for e in rm.events)
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    rm.close()
+
+
+def test_defragment_respects_relocation_limit():
+    pool = DevicePool.virtual(32, devices_per_pod=32)
+    rm = FlowOSRM(pool, relocation_limit=1)
+    stop, go = threading.Event(), threading.Event()
+    ids = rm.submit_many(_checkerboard(32, 4, stop, go))
+    rm.schedule_once()
+    go.set()
+    deadline = time.perf_counter() + 5
+    while time.perf_counter() < deadline:
+        if all(rm.status(i)["status"] == "done" for i in ids[1::2]):
+            break
+        time.sleep(0.002)
+    _drive_defrag(rm, pool, max_moves=8, frag_threshold=0.0)
+    assert all(rm.status(i)["relocations"] <= 1 for i in ids[::2])
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    rm.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(20))
+def test_randomized_fragment_then_compact_invariants(seed):
+    """Randomized fragmentation → compaction: whatever the layout, the
+    pass must never lose capacity, never worsen the largest free run,
+    and leave the free-run index consistent (brute-force check)."""
+    from tests.test_pool_index import check_index
+
+    rng = random.Random(1000 + seed)
+    lease_n = rng.choice([2, 4])
+    pool_size = rng.choice([32, 64])
+    pool = DevicePool.virtual(pool_size, devices_per_pod=pool_size)
+    rm = FlowOSRM(pool, relocation_limit=4)
+    stop, go = threading.Event(), threading.Event()
+    specs = []
+    for i in range(pool_size // lease_n):
+        if rng.random() < 0.55:
+            specs.append(JobSpec(
+                name=f"keep{i}", preemptible=True, relocatable=True,
+                tasks=[TaskSpec(name="t", n_devices=lease_n,
+                                task_fn=_coop_task(stop))]))
+        else:
+            specs.append(JobSpec(name=f"gap{i}", tasks=[
+                TaskSpec(name="t", n_devices=lease_n,
+                         task_fn=lambda s: go.wait(30))]))
+    ids = rm.submit_many(specs)
+    rm.schedule_once()
+    go.set()
+    gap_ids = [i for i, sp in zip(ids, specs) if sp.name.startswith("gap")]
+    deadline = time.perf_counter() + 10
+    while time.perf_counter() < deadline:
+        if all(rm.status(i)["status"] == "done" for i in gap_ids):
+            break
+        time.sleep(0.002)
+    free0 = pool.free_count()
+    largest0 = pool.largest_free_run()
+    check_index(pool)
+    _drive_defrag(rm, pool, max_moves=4, frag_threshold=0.1)
+    check_index(pool)
+    assert pool.free_count() == free0, "compaction lost/gained capacity"
+    assert pool.largest_free_run() >= largest0, (
+        f"seed={seed}: compaction shrank the largest free run")
+    stop.set()
+    rm.run_until_idle(timeout_s=30)
+    check_index(pool)
+    assert pool.utilization() == 0.0
+    rm.close()
