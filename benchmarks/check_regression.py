@@ -12,6 +12,9 @@ fresh run are compared — a machine that skips a size is not a failure):
                            (higher is better; capped at record time)
   defrag/largest_run_ratio_<n>  BENCH_preempt.json  defrag[n]
                            .largest_run_ratio (higher is better)
+  serve/speedup_<w>        BENCH_serve.json    workloads[w].speedup
+                           (higher is better; continuous vs static
+                           batching tokens/sec)
 
 The default slack factor of 2x absorbs machine-to-machine variance while
 still catching the failure modes that matter: an accidental O(n) rescan
@@ -35,7 +38,7 @@ ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 if ROOT not in sys.path:  # `python benchmarks/check_regression.py` puts
     sys.path.insert(0, ROOT)  # benchmarks/ first — make the package import
 COMMITTED = ("BENCH_sched.json", "BENCH_pipeline.json",
-             "BENCH_preempt.json")
+             "BENCH_preempt.json", "BENCH_serve.json")
 
 Metric = Tuple[float, str]  # (value, "lower"|"higher" is better)
 
@@ -60,6 +63,10 @@ def extract_metrics(record: dict) -> Dict[str, Metric]:
             if "largest_run_ratio" in cell:
                 out[f"defrag/largest_run_ratio_{n}"] = (
                     cell["largest_run_ratio"], "higher")
+    if record.get("bench") == "serve_continuous":
+        for w, cell in record.get("workloads", {}).items():
+            if "speedup" in cell:
+                out[f"serve/speedup_{w}"] = (cell["speedup"], "higher")
     return out
 
 
@@ -92,10 +99,11 @@ def compare(fresh: Dict[str, Metric], committed: Dict[str, Metric],
 
 def run_gate(slack: float = 2.0, sched_kwargs: dict = None,
              pipe_kwargs: dict = None, preempt_kwargs: dict = None,
-             root: str = ROOT) -> List[str]:
+             serve_kwargs: dict = None, root: str = ROOT) -> List[str]:
     """Run the gated benchmarks fresh (into temp files — the committed
     records are never touched) and compare. Returns failure strings."""
-    from benchmarks import pipeline_overlap, preempt_frag, sched_scale
+    from benchmarks import (pipeline_overlap, preempt_frag, sched_scale,
+                            serve_continuous)
 
     committed = load_committed(root)
     sched_kwargs = dict(sched_kwargs if sched_kwargs is not None else
@@ -111,12 +119,16 @@ def run_gate(slack: float = 2.0, sched_kwargs: dict = None,
                           # magnitude ahead of the FIFO drain
                           dict(pool_size=10_000, attempts=3,
                                defrag_pool=1024))
+    # committed-record workload: the speedup is step-count-structural, so
+    # the full config reruns in seconds and gates tight
+    serve_kwargs = dict(serve_kwargs if serve_kwargs is not None else {})
     fresh: Dict[str, Metric] = {}
     with tempfile.TemporaryDirectory() as td:
         for mod, kwargs, fname in (
                 (sched_scale, sched_kwargs, "sched.json"),
                 (pipeline_overlap, pipe_kwargs, "pipe.json"),
-                (preempt_frag, preempt_kwargs, "preempt.json")):
+                (preempt_frag, preempt_kwargs, "preempt.json"),
+                (serve_continuous, serve_kwargs, "serve.json")):
             path = os.path.join(td, fname)
             mod.bench(json_path=path, **kwargs)
             with open(path) as f:

@@ -11,7 +11,10 @@ import jax.numpy as jnp
 
 
 def _time(f, *args, iters=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    # warm up (trace/compile) and sync the whole result pytree: the old
+    # tuple-only sync let non-tuple outputs leak async work into the
+    # timed region below
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = f(*args)

@@ -11,6 +11,7 @@
   sched_scale     —        acquire latency + jobs/sec vs fleet size
   pipeline_overlap §2/§3   microbatch pipelining vs the serial data plane
   preempt_frag    §4/§9    preemption time-to-placement + defrag recovery
+  serve_continuous §10     continuous vs static batching tokens/sec
 
 ``--smoke`` runs every module at tiny sizes and never touches the
 committed BENCH_*.json records — the CI fast path (a full run is the
@@ -39,6 +40,8 @@ SMOKE_KWARGS = {
     "preempt_frag": dict(pool_size=256, fill_frac=0.75, small_n=8,
                          small_dur_s=0.4, big_frac=0.5, attempts=1,
                          defrag_pool=64, defrag_lease_n=4),
+    "serve_continuous": dict(n_requests=12, lanes=4, prompt_len=4,
+                             max_new_cap=16),
 }
 
 
@@ -47,7 +50,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (amortization, disagg_overhead, kernels,
                             lifecycle, pipeline_overlap, preempt_frag,
-                            roofline, scaling, sched_scale, sharing)
+                            roofline, scaling, sched_scale,
+                            serve_continuous, sharing)
 
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[1])
     ap.add_argument("--smoke", action="store_true",
@@ -59,12 +63,15 @@ def main(argv=None) -> None:
     repo_root = os.path.abspath(os.path.join(
         os.path.dirname(__file__), ".."))
     json_for = (dict.fromkeys(
-        ("sched_scale", "pipeline_overlap", "preempt_frag")) if args.smoke
+        ("sched_scale", "pipeline_overlap", "preempt_frag",
+         "serve_continuous")) if args.smoke
         else {"sched_scale": os.path.join(repo_root, "BENCH_sched.json"),
               "pipeline_overlap": os.path.join(repo_root,
                                                "BENCH_pipeline.json"),
               "preempt_frag": os.path.join(repo_root,
-                                           "BENCH_preempt.json")})
+                                           "BENCH_preempt.json"),
+              "serve_continuous": os.path.join(repo_root,
+                                               "BENCH_serve.json")})
     named = [
         ("lifecycle", lifecycle), ("amortization", amortization),
         ("sharing", sharing), ("disagg_overhead", disagg_overhead),
@@ -72,6 +79,7 @@ def main(argv=None) -> None:
         ("roofline", roofline), ("sched_scale", sched_scale),
         ("pipeline_overlap", pipeline_overlap),
         ("preempt_frag", preempt_frag),
+        ("serve_continuous", serve_continuous),
     ]
     modules = []
     for name, mod in named:

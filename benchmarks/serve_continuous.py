@@ -1,0 +1,104 @@
+"""Serving plane: continuous batching vs static batching on a ragged
+Zipf-length workload (DESIGN.md §10).
+
+Both schedulers run the *same* compiled paged-decode step at the same
+lane count against the same HBM page budget (what static batching would
+reserve for a worst-case batch), so the measured tokens/sec difference is
+pure scheduling: the static baseline drains every batch at its
+straggler's speed while continuous batching refills a retiring lane on
+the very next token. The speedup is structurally step-count-driven
+(total decode steps taken), making the gated row stable across hosts.
+
+``python -m benchmarks.serve_continuous`` writes BENCH_serve.json;
+benchmarks/check_regression.py gates ``serve/speedup_zipf`` against the
+committed record.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+
+def bench(*, n_requests: int = 64, lanes: int = 8, prompt_len: int = 8,
+          max_new_cap: int = 64, zipf_a: float = 1.6, page_size: int = 8,
+          repeats: int = 2, seed: int = 0, json_path: str = None):
+    import jax
+
+    from repro.serve import (ContinuousEngine, LMConfig,
+                             equal_page_budget, make_zipf_requests,
+                             timed_drain, warmup_engine)
+    from repro.serve import model as PM
+
+    cfg = LMConfig(page_size=page_size)
+    params = PM.init(cfg, jax.random.PRNGKey(seed))
+    per_seq, num_pages = equal_page_budget(lanes, prompt_len, max_new_cap,
+                                           page_size)
+
+    def engine(mode):
+        return ContinuousEngine(cfg, params, lanes=lanes,
+                                num_pages=num_pages,
+                                max_pages_per_seq=per_seq, mode=mode)
+
+    def workload():
+        return make_zipf_requests(cfg.vocab, np.random.default_rng(seed),
+                                  n_requests, prompt_len, zipf_a=zipf_a,
+                                  max_new_cap=max_new_cap)
+
+    # compile the shared step executable outside both timed regions
+    warmup_engine(cfg, params, lanes=lanes, num_pages=num_pages,
+                  max_pages_per_seq=per_seq)
+
+    def best_of(mode):
+        # best-of-N per scheduler: the step counts are deterministic,
+        # only wall time is noisy, so the fastest run is the fair one
+        runs = [timed_drain(engine(mode), workload())
+                for _ in range(max(repeats, 1))]
+        return max(runs, key=lambda s: s["tok_per_s"])
+
+    cont = best_of("continuous")
+    stat = best_of("static")
+    assert cont["generated_tokens"] == stat["generated_tokens"], (
+        "schedulers disagree on the workload's token count")
+    speedup = cont["tok_per_s"] / max(stat["tok_per_s"], 1e-9)
+    step_ratio = stat["steps"] / max(cont["steps"], 1)
+
+    rows = [
+        ("serve/continuous_tok_s", cont["tok_per_s"],
+         f"steps={cont['steps']};preempt={cont['preemptions']}"),
+        ("serve/static_tok_s", stat["tok_per_s"],
+         f"steps={stat['steps']}"),
+        ("serve/speedup_zipf", speedup,
+         f"step_ratio={step_ratio:.2f};gen_tokens="
+         f"{cont['generated_tokens']};lanes={lanes};pages={num_pages}"),
+    ]
+    if json_path:
+        record = {
+            "bench": "serve_continuous",
+            "config": {"n_requests": n_requests, "lanes": lanes,
+                       "prompt_len": prompt_len,
+                       "max_new_cap": max_new_cap, "zipf_a": zipf_a,
+                       "page_size": page_size, "num_pages": num_pages,
+                       "seed": seed},
+            "workloads": {"zipf": {
+                "continuous_tok_s": cont["tok_per_s"],
+                "static_tok_s": stat["tok_per_s"],
+                "speedup": speedup,
+                "step_ratio": step_ratio,
+                "gen_tokens": cont["generated_tokens"],
+                "steps_continuous": cont["steps"],
+                "steps_static": stat["steps"],
+                "preemptions": cont["preemptions"],
+            }},
+        }
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=1, sort_keys=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve.json")
+    for r in bench(json_path=path):
+        print(",".join(str(x) for x in r))

@@ -1,4 +1,5 @@
-from repro.core.pool import DevicePool, Lease, DeviceInfo, AllocationError  # noqa: F401
+from repro.core.pool import (DevicePool, Lease, DeviceInfo,  # noqa: F401
+                             AllocationError, FreeRunIndex)
 from repro.core.slice import Slice, SliceState  # noqa: F401
 from repro.core.job import (JobSpec, TaskSpec, JobStatus,  # noqa: F401
                             Preempted)

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -57,13 +58,73 @@ class LinkModel:
     physical bus the hop would otherwise be free, so transfers optionally
     pay ``latency + bytes/bandwidth`` of modeled wire time. The delay is
     served by the hop worker that owns the edge — concurrent with every
-    other hop and stage — so overlap behaves like real DMA hardware."""
+    other hop and stage — so overlap behaves like real DMA hardware.
+
+    When several transfers are in flight on *one* edge they share its
+    bandwidth: MetaAccelerator routes each hop through a per-edge
+    ``_FairShareEdge`` where n concurrent streams each drain at
+    bandwidth/n (fluid-flow fair share), instead of each being timed as
+    if alone on the wire."""
 
     gbytes_per_s: float = 4.0
     latency_s: float = 0.0
 
     def delay_s(self, nbytes: int) -> float:
+        """Uncontended wire time (single stream on the edge)."""
         return self.latency_s + nbytes / (self.gbytes_per_s * 1e9)
+
+
+class _FairShareEdge:
+    """Fluid-flow model of one fabric edge: every in-flight stream drains
+    at bandwidth / n_active, re-weighted whenever a stream joins or
+    finishes. ``settle`` advances the fluid state piecewise (a stream
+    finishing mid-interval changes the rate for the rest); ``wait``
+    blocks a hop worker until its stream has drained, re-projecting on
+    every membership change (joiners notify the condition)."""
+
+    def __init__(self, bytes_per_s: float):
+        self.bps = bytes_per_s
+        self.cond = threading.Condition()
+        self.streams: Dict[int, float] = {}   # sid -> bytes remaining
+        self.last: Optional[float] = None
+        self._ids = itertools.count()
+
+    def _settle(self, now: float):
+        while self.streams and now > self.last:
+            n = len(self.streams)
+            rate = self.bps / n
+            to_first_drain = min(self.streams.values()) / rate
+            dt = min(to_first_drain, now - self.last)
+            drained = []
+            for sid in self.streams:
+                self.streams[sid] -= dt * rate
+                if self.streams[sid] <= 1e-9:
+                    drained.append(sid)
+            for sid in drained:
+                del self.streams[sid]
+            self.last += dt
+        self.last = now
+
+    def start(self, nbytes: int) -> int:
+        with self.cond:
+            now = time.perf_counter()
+            if self.last is None:
+                self.last = now
+            self._settle(now)
+            sid = next(self._ids)
+            self.streams[sid] = float(max(nbytes, 1))
+            self.cond.notify_all()    # waiters re-project at the new n
+            return sid
+
+    def wait(self, sid: int):
+        with self.cond:
+            while True:
+                self._settle(time.perf_counter())
+                if sid not in self.streams:
+                    return
+                projected = (self.streams[sid] * len(self.streams)
+                             / self.bps)
+                self.cond.wait(timeout=projected)
 
 
 def split_microbatches(inputs: Any, k: int) -> List[Any]:
@@ -124,6 +185,17 @@ class MetaAccelerator:
             maxlen=transfer_log_maxlen)
         self._log_lock = threading.Lock()
         self._totals = {"hops": 0, "bytes": 0, "seconds": 0.0}
+        # one fair-share bandwidth model per destination slice (= fabric
+        # edge): concurrent in-flight hops split the modeled wire
+        self._edges: Dict[int, _FairShareEdge] = {}
+
+    def _edge_for(self, dst: Slice) -> "_FairShareEdge":
+        with self._log_lock:
+            edge = self._edges.get(id(dst))
+            if edge is None:
+                edge = _FairShareEdge(self.link.gbytes_per_s * 1e9)
+                self._edges[id(dst)] = edge
+            return edge
 
     def allocate(self, stages: Sequence[StageSpec]) -> List[Slice]:
         # gang feasibility first (one O(#kinds) index query): a stage set
@@ -183,9 +255,14 @@ class MetaAccelerator:
     def release(self, slices: Sequence[Slice]):
         """Tear every stage down through the slice lifecycle
         (detach_device + destroy_machine), so stages end DESTROYED with
-        their transitions timed — not as dead ATTACHED husks."""
+        their transitions timed — not as dead ATTACHED husks. Also drops
+        the slices' fair-share edge models: id() can be recycled, and a
+        new slice must never inherit a dead edge's stream state."""
         for s in slices:
             s.teardown()
+        with self._log_lock:
+            for s in slices:
+                self._edges.pop(id(s), None)
 
     # -- single-hop API ----------------------------------------------------
     def transfer(self, dst: Slice, x: Any, stage: str = "hop", *,
@@ -215,15 +292,24 @@ class MetaAccelerator:
         # a.nbytes reads shape/dtype metadata only; np.asarray(a) would
         # copy every activation leaf back to the host just to count bytes
         nbytes = sum(a.nbytes for a in jax.tree.leaves(moved))
-        delay = self.link.delay_s(nbytes) if self.link is not None else 0.0
+        # the stream occupies the edge from issue time: a second hop
+        # overlapping this one shares the modeled bandwidth immediately
+        edge = sid = None
+        if self.link is not None:
+            edge = self._edge_for(dst)
+            sid = edge.start(nbytes)
         done = [False]
 
         def complete():
             if done[0]:
                 return
             done[0] = True
-            if delay:
-                remaining = delay - (time.perf_counter() - t0)
+            if edge is not None:
+                edge.wait(sid)
+                # uncontended floor keeps single-stream timing identical
+                # to the pre-fair-share model (latency + bytes/bw)
+                remaining = (t0 + self.link.delay_s(nbytes)
+                             - time.perf_counter())
                 if remaining > 0:
                     time.sleep(remaining)
             jax.block_until_ready(moved)

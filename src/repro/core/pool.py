@@ -72,7 +72,7 @@ Bucket = Tuple[int, str]   # (pod, kind)
 Run = Tuple[int, int]      # half-open uid range [start, end)
 
 
-class _FreeRunIndex:
+class FreeRunIndex:
     """Sorted contiguous free-uid runs, bucketed per (pod, kind).
 
     Each bucket keeps two parallel sorted lists: runs ordered by start uid
@@ -81,6 +81,12 @@ class _FreeRunIndex:
     a couple of list inserts/deletes — O(log n) search with C-speed
     memmoves — against the seed's full sort + rescan per acquire.
     Per-kind free counts make feasibility checks O(1).
+
+    The index is deliberately unit-agnostic: a "uid" is any densely
+    numbered resource. DevicePool buckets accelerators per (pod, kind);
+    the serving plane's PagedKVCache (serve/kv_cache.py) buckets KV-cache
+    pages in one HBM pool — one allocator abstraction places both devices
+    in the fabric and pages in HBM (DESIGN.md §10).
     """
 
     def __init__(self):
@@ -239,7 +245,7 @@ class DevicePool:
         self._lock = threading.RLock()
         self._lease_counter = itertools.count()
         self._leases: Dict[int, Lease] = {}
-        self._index = _FreeRunIndex()
+        self._index = FreeRunIndex()
         self._release_listeners: List[Callable[[], None]] = []
         free = sorted((d for d in self._devices
                        if d.healthy and d.lease_id is None),

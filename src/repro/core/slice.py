@@ -79,6 +79,11 @@ class Slice:
     # use it to restore on (re)start and the RM uses it to persist the
     # state a Preempted signal yields.
     ckpt: Any = None
+    # named HBM reservations against this slice (bytes): long-lived
+    # device-resident pools a task pins for its whole run — the serving
+    # engine registers its KV page pool here (DESIGN.md §10), so slice
+    # accounting sees the memory a job holds, not just the devices
+    hbm: Dict[str, int] = dataclasses.field(default_factory=dict)
     # (mesh, NamedSharding) cache for replicated_sharding()
     _repl_sharding: Any = dataclasses.field(default=None, repr=False)
     # cooperative-preemption flag: the RM sets it, the running task polls
@@ -158,6 +163,7 @@ class Slice:
             self.mesh = None
             self.executable = None
             self._repl_sharding = None
+            self.hbm.clear()
         return self._transition("destroy_machine", fn)
 
     def teardown(self):
@@ -193,6 +199,19 @@ class Slice:
         jobs waiting this way cost no scheduler churn, and the wake is
         immediate when the RM asks."""
         return self._preempt.wait(timeout_s)
+
+    # -- HBM accounting -------------------------------------------------
+    def account_hbm(self, name: str, nbytes: int):
+        """Register (or update) a named device-memory reservation, e.g.
+        ``slice.account_hbm("kv_pages", cache.hbm_bytes)``."""
+        self.hbm[name] = int(nbytes)
+
+    def release_hbm(self, name: str):
+        self.hbm.pop(name, None)
+
+    def hbm_bytes(self) -> int:
+        """Total bytes of named reservations currently accounted."""
+        return sum(self.hbm.values())
 
     def replicated_sharding(self):
         """Cached fully-replicated NamedSharding over this slice's mesh.

@@ -1,0 +1,174 @@
+"""Paged flash-decode kernel: one query token against a *paged* KV cache.
+
+The serving plane (DESIGN.md §10) stores KV in fixed-size pages scattered
+through one HBM block pool; each sequence owns an ordered page list (its
+page table). This kernel extends decode_attention.py's split-KV grid
+(batch, q_head, kv_blocks) by routing the kv-block axis through the page
+table with scalar prefetch: block j of sequence b streams page
+``page_table[b, j]`` out of the pool, so the gather costs the same DMA the
+contiguous kernel pays — no host-side re-packing, no copy into a
+per-sequence buffer.
+
+Differences from the contiguous kernel, both forced by continuous
+batching: ``q_pos`` is per-sequence (every lane decodes at its own
+position), and the KV extent is ``page_table.shape[1] * page_size``
+logical tokens regardless of where the pages physically live.
+
+Page-table slots at or past a sequence's live extent must still hold a
+*valid* page id (the pool reserves page 0 as the null page): the block is
+masked out of the softmax by ``kv_len``, but its index is prefetched
+before the mask is known.
+
+``paged_attention_jnp`` is the pure-jnp twin (gather + masked softmax)
+the CPU serving engine jits; interpret-mode tests pin kernel == twin ==
+contiguous reference.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, kvlen_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, window, softcap, ps, n_pages):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kvlen_ref[b]
+    q_pos = qpos_ref[b]
+    k_start = j * ps
+    run = k_start < kv_len
+    if window is not None:
+        run = run & (k_start + ps - 1 >= q_pos - (window - 1))
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)          # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (ps, D)
+        v = v_ref[0, 0]                              # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, ps)
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        if window is not None:
+            s = jnp.where(q_pos - k_pos < window, s, NEG_INF)
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)      # (1, D)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[0, 0] = m_new
+        l_ref[0, 0] = l_new
+
+    @pl.when(j == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[0, 0], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pages, v_pages, page_table, kv_len,
+                               q_pos, *,
+                               window: Optional[int] = None,
+                               softcap: Optional[float] = None,
+                               scale: Optional[float] = None,
+                               interpret: bool = True):
+    """q: (B, Hq, 1, D); k_pages, v_pages: (P, Hkv, page_size, D);
+    page_table: (B, max_pages) int32, every slot a valid page id (pad with
+    the null page 0); kv_len, q_pos: (B,) int32. Returns (B, Hq, 1, D)."""
+    B, Hq, _, D = q.shape
+    _, Hkv, ps, _ = k_pages.shape
+    G = Hq // Hkv
+    n_pages = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, ps=ps, n_pages=n_pages)
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,   # page_table, kv_len, q_pos
+        grid=(B, Hq, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, j, tbl, kvl, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, j, tbl, kvl, qp:
+                         (tbl[b, j], h // G, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, j, tbl, kvl, qp:
+                         (tbl[b, j], h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D),
+                               lambda b, h, j, tbl, kvl, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        interpret=interpret,
+    )(page_table, kv_len, q_pos, q, k_pages, v_pages)
+
+
+def gather_kv(pages, page_table):
+    """(P, Hkv, ps, D) pages + (B, max_pages) table -> contiguous
+    (B, Hkv, max_pages*ps, D) — the logical cache view a sequence sees."""
+    g = pages[page_table]                       # (B, maxp, Hkv, ps, D)
+    B, maxp, Hkv, ps, D = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, maxp * ps, D)
+
+
+def paged_attention_jnp(q, k_pages, v_pages, page_table, kv_len, q_pos, *,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None):
+    """Pure-jnp twin of the paged kernel (same signature minus interpret).
+    Jits to a gather + one masked softmax; the serving engine's CPU hot
+    path. Per-row math is independent of every other row, which is what
+    makes continuous-batching output bit-identical to static batching."""
+    B, Hq, _, D = q.shape
+    Hkv = k_pages.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = gather_kv(k_pages, page_table)          # (B, Hkv, T, D)
+    v = gather_kv(v_pages, page_table)
+    T = k.shape[2]
+    kk = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), kk) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    kp = jnp.arange(T)
+    mask = (kp[None, :] < kv_len[:, None]) & (kp[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask &= (q_pos[:, None] - kp[None, :]) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", p, vv)
+    return out.astype(q.dtype)

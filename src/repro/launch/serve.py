@@ -9,13 +9,24 @@ prefill/decode meta-accelerator path (DESIGN.md §5): prefill runs on one
 sub-slice, token decode on another, the KV cache hops the fabric between
 them, and microbatch m decodes while m+1 prefills.
 
+``--continuous`` runs the paged-KV continuous-batching serving plane
+(DESIGN.md §10) on a Zipf-ragged workload: sequences join/retire every
+decode step against one HBM page pool (the PR 1 free-run index as page
+allocator), with the static-batch baseline timed alongside. Combine with
+``--microbatches k`` to compute prompt KV on a disaggregated prefill
+sub-slice and hop it into the decode engine over the PR 2 pipeline, so
+prefill microbatches overlap in-flight decode.
+
 Usage (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
       --batch 4 --prompt-len 32 --decode-len 16 [--microbatches 2]
+  PYTHONPATH=src python -m repro.launch.serve --continuous \
+      --requests 32 --lanes 8 [--microbatches 4]
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -241,9 +252,163 @@ def run_serving_pipelined(cfg, *, batch: int, prompt_len: int,
     }
 
 
+def run_serving_continuous(*, n_requests: int, lanes: int,
+                           prompt_len: int = 8, page_size: int = 8,
+                           max_new_cap: int = 64, zipf_a: float = 1.8,
+                           microbatches: int = 1, seed: int = 0,
+                           link: LinkModel = None,
+                           compare_static: bool = True):
+    """Continuous-batching serving plane (DESIGN.md §10) through a
+    FlowOS-RM slice. The engine's KV page pool is sized to the static
+    baseline's worst case, so both schedulers run at an *equal HBM page
+    budget* and the speedup is pure scheduling. ``microbatches > 1``
+    additionally disaggregates prefill onto its own sub-slice: prompt KV
+    is computed there, hops the fabric (PR 2 data plane), and is ingested
+    into the decode engine while later prefill microbatches are still in
+    flight."""
+    from repro.serve import (ContinuousEngine, LMConfig,
+                             equal_page_budget, make_zipf_requests,
+                             timed_drain, warmup_engine)
+    from repro.serve import model as PM
+
+    cfg = LMConfig(page_size=page_size)
+    params = PM.init(cfg, jax.random.PRNGKey(seed))
+    per_seq, num_pages = equal_page_budget(lanes, prompt_len, max_new_cap,
+                                           page_size)
+    out = {"num_pages": num_pages, "page_size": page_size}
+
+    def fresh_requests():
+        return make_zipf_requests(
+            cfg.vocab, np.random.default_rng(seed), n_requests,
+            prompt_len, zipf_a=zipf_a, max_new_cap=max_new_cap)
+
+    prefill_fn = jax.jit(functools.partial(PM.prefill, cfg))
+
+    def warmup():
+        warmup_engine(cfg, params, lanes=lanes, num_pages=num_pages,
+                      max_pages_per_seq=per_seq)
+
+    if microbatches <= 1:
+        pool = DevicePool.from_jax_devices(jax.devices()[:1],
+                                           devices_per_node=1)
+        rm = FlowOSRM(pool)
+
+        def task(slice_):
+            warmup()
+            eng = ContinuousEngine(cfg, params, lanes=lanes,
+                                   num_pages=num_pages,
+                                   max_pages_per_seq=per_seq,
+                                   slice_=slice_)
+            out["continuous"] = timed_drain(eng, fresh_requests())
+            out["hbm_bytes"] = slice_.hbm_bytes()
+            if compare_static:
+                stat = ContinuousEngine(cfg, params, lanes=lanes,
+                                        num_pages=num_pages,
+                                        max_pages_per_seq=per_seq,
+                                        mode="static")
+                out["static"] = timed_drain(stat, fresh_requests())
+            return out
+
+        spec = JobSpec(name="serve-continuous", tasks=[TaskSpec(
+            name="serve", n_devices=1, mesh_shape=(1, 1),
+            axis_names=("data", "model"), arch="paged-lm",
+            task_fn=task)])
+        rec = rm.wait(rm.submit(spec), timeout_s=3600)
+        if rec.error:
+            raise RuntimeError(rec.error)
+        out["breakdown"] = rec.slices[0].breakdown()
+    else:
+        # disaggregated prefill: one sub-slice computes prompt KV, the
+        # hop carries it onto the decode sub-slice, and the engine
+        # ingests microbatch m while m+1 prefills (PR 2 overlap)
+        pool = DevicePool.virtual(2, devices_per_node=1,
+                                  kinds={(0, 1): "prefill",
+                                         (1, 2): "decode"})
+        dev = jax.devices()[0]
+        for d in pool._devices:
+            d.device = dev
+        meta = MetaAccelerator(pool, link=link)
+        if n_requests % microbatches:
+            raise ValueError(f"requests={n_requests} must divide into "
+                             f"microbatches={microbatches}")
+        engine_box = {}
+
+        def prefill_stage(slice_, payload):
+            k, v, last = prefill_fn(params,
+                                    jnp.asarray(payload["prompts"]))
+            # batch axis first so the microbatch split/concat sees it
+            return {"k": jnp.moveaxis(k, 1, 0), "v": jnp.moveaxis(v, 1, 0),
+                    "last": last, "rid": payload["rid"]}
+
+        def decode_stage(slice_, state):
+            eng = engine_box["engine"]
+            for i, rid in enumerate(np.asarray(state["rid"])):
+                req = engine_box["reqs"][int(rid)]
+                while None not in eng.lanes:
+                    eng.step()          # decode overlaps later prefills
+                eng.ingest_prefill(req, state["k"][i], state["v"][i],
+                                   state["last"][i])
+            return np.asarray(state["rid"])
+
+        stages = [
+            StageSpec(name="prefill", kind="prefill", n_devices=1,
+                      mesh_shape=(1, 1), axis_names=("data", "model"),
+                      stage_fn=prefill_stage),
+            StageSpec(name="decode", kind="decode", n_devices=1,
+                      mesh_shape=(1, 1), axis_names=("data", "model"),
+                      stage_fn=decode_stage, donate_activations=False),
+        ]
+        slices = meta.allocate(stages)
+        try:
+            def pipeline_drain(reqs_list):
+                engine = ContinuousEngine(
+                    cfg, params, lanes=lanes, num_pages=num_pages,
+                    max_pages_per_seq=per_seq, slice_=slices[1])
+                engine_box["engine"] = engine
+                engine_box["reqs"] = reqs_list
+                payload = {
+                    "prompts": np.stack([r.prompt for r in reqs_list]),
+                    "rid": np.arange(n_requests, dtype=np.int32)}
+                t0 = time.perf_counter()
+                meta.run_pipeline(stages, slices, payload,
+                                  microbatches=microbatches)
+                stats = engine.run()    # drain in-flight decodes
+                stats["seconds"] = time.perf_counter() - t0
+                stats["tok_per_s"] = stats["generated_tokens"] / max(
+                    stats["seconds"], 1e-9)
+                return stats
+
+            # untimed full-pipeline pass compiles everything the timed
+            # run will hit — including the executables specialized on
+            # the hop's committed shardings, which a hop-less warmup
+            # cannot reach (PR 2's run_serving_pipelined does the same)
+            pipeline_drain(fresh_requests())
+            transfers_before = meta.transfer_totals()
+            out["continuous"] = pipeline_drain(fresh_requests())
+            transfers_after = meta.transfer_totals()
+            out["hbm_bytes"] = slices[1].hbm_bytes()
+            out["transfers"] = {
+                k: transfers_after[k] - transfers_before[k]
+                for k in transfers_after}
+        finally:
+            meta.release(slices)
+        if compare_static:
+            # the baseline has no prefill stage to disaggregate — it is
+            # the same static drain as the slice path (warmed: its
+            # uncommitted-sharding executable differs from the hop-fed
+            # pipeline engines')
+            warmup()
+            stat = ContinuousEngine(cfg, params, lanes=lanes,
+                                    num_pages=num_pages,
+                                    max_pages_per_seq=per_seq,
+                                    mode="static")
+            out["static"] = timed_drain(stat, fresh_requests())
+    return out
+
+
 def main():
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True)
+    p.add_argument("--arch")
     p.add_argument("--smoke", action="store_true")
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -253,8 +418,42 @@ def main():
     p.add_argument("--link-gbytes", type=float, default=0.0,
                    help="emulated fabric bandwidth in gigaBYTES/s for "
                         "the pipelined path (0 = no emulation)")
+    p.add_argument("--continuous", action="store_true",
+                   help="paged-KV continuous-batching serving plane "
+                        "(DESIGN.md §10)")
+    p.add_argument("--requests", type=int, default=32,
+                   help="continuous mode: workload size")
+    p.add_argument("--lanes", type=int, default=8,
+                   help="continuous mode: decode lanes")
+    p.add_argument("--page-size", type=int, default=8,
+                   help="continuous mode: tokens per KV page")
     args = p.parse_args()
 
+    if args.continuous:
+        link = (LinkModel(gbytes_per_s=args.link_gbytes)
+                if args.link_gbytes > 0 else None)
+        out = run_serving_continuous(
+            n_requests=args.requests, lanes=args.lanes,
+            prompt_len=args.prompt_len, page_size=args.page_size,
+            microbatches=args.microbatches, link=link)
+        c = out["continuous"]
+        print(f"[serve] continuous batching: {c['tok_per_s']:.1f} tok/s "
+              f"({c['generated_tokens']} tokens, {c['steps']} steps, "
+              f"{c['preemptions']} preemptions, "
+              f"{out['hbm_bytes'] / 1e6:.1f} MB KV pool)")
+        if "static" in out:
+            s = out["static"]
+            print(f"[serve] static baseline:    {s['tok_per_s']:.1f} "
+                  f"tok/s ({s['steps']} steps) -> "
+                  f"{c['tok_per_s'] / s['tok_per_s']:.2f}x")
+        if "transfers" in out:
+            tr = out["transfers"]
+            print(f"[serve] prefill fabric: {tr['hops']} hops, "
+                  f"{tr['bytes'] / 1e6:.2f} MB, {tr['seconds']:.2f}s")
+        return
+
+    if args.arch is None:
+        p.error("--arch is required unless --continuous")
     cfg = load_config(args.arch, args.smoke)
     if args.microbatches > 1:
         link = (LinkModel(gbytes_per_s=args.link_gbytes)

@@ -1,0 +1,7 @@
+from repro.serve.kv_cache import (PagedKVCache,  # noqa: F401
+                                  PageExhausted, SequenceCapExceeded)
+from repro.serve.engine import (ContinuousEngine, Request,  # noqa: F401
+                                RequestState, equal_page_budget,
+                                make_zipf_requests, timed_drain,
+                                warmup_engine)
+from repro.serve.model import LMConfig  # noqa: F401

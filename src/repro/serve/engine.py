@@ -1,0 +1,404 @@
+"""Continuous-batching serving engine over the paged KV pool.
+
+The serving analogue of FlowOS-RM's event-driven scheduler: instead of
+jobs onto devices, it places *sequences onto decode lanes and pages*,
+re-deciding every step (DESIGN.md §10):
+
+  * **join on arrival** — free lanes are refilled from the waiting queue
+    at every step boundary, so a retiring straggler's lane is reused on
+    the very next token, not when the whole batch drains;
+  * **retire on completion** — a sequence leaves (EOS / token budget) and
+    its pages merge back into the pool's free runs immediately;
+  * **preempt-to-recompute on page exhaustion** — when a growing sequence
+    cannot get a page, the youngest sequence is evicted: pages freed, its
+    prompt + tokens-so-far re-queued as a recompute (greedy decode makes
+    the continuation bit-identical), mirroring FlowOS-RM's
+    checkpoint-preempt protocol with "checkpoint" = the token history.
+
+The decode step itself runs at a *fixed lane count* — one compiled
+executable for the whole run, no retrace as sequences come and go; lanes
+without a sequence write to the null page and their outputs are ignored.
+Prompts stream through the same step function one token per lane per
+step (chunked prefill), so prefill tokens of a joining request overlap
+in-flight decode of every other lane — the token-level analogue of the
+PR 2 microbatch overlap. Alternatively ``ingest_prefill`` admits a
+request whose prompt KV was computed by a *disaggregated prefill stage*
+(launch/serve.py wires this through the PR 2 MetaAccelerator hop).
+
+``mode="static"`` is the baseline this PR retires: admission only when
+every lane is free, i.e. the whole batch drains at straggler speed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+import itertools
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve import model as M
+from repro.serve.kv_cache import (PagedKVCache, PageExhausted,
+                                  SequenceCapExceeded)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_step(cfg: "M.LMConfig", use_pallas: bool):
+    """One compiled decode step per (config, backend) shared by every
+    engine — the static-baseline and continuous engines in one benchmark
+    process must hit the same executable, not recompile per engine."""
+    import jax
+    return jax.jit(functools.partial(M.decode_step, cfg,
+                                     use_pallas=use_pallas),
+                   donate_argnums=(1, 2))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_ingest():
+    import jax
+    return jax.jit(ContinuousEngine._scatter_prompt,
+                   donate_argnums=(0, 1))
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (T,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: RequestState = RequestState.WAITING
+    prefills: int = 0               # (re)prefill count: >1 => preempted
+
+
+def timed_drain(engine: "ContinuousEngine", reqs) -> dict:
+    """Submit, drain, and annotate the stats with wall seconds and
+    generated tokens/sec — the one definition of the serving throughput
+    metric, shared by the launch driver and the gated benchmark."""
+    import time
+    engine.submit_many(reqs)
+    t0 = time.perf_counter()
+    stats = engine.run()
+    stats["seconds"] = time.perf_counter() - t0
+    stats["tok_per_s"] = stats["generated_tokens"] / max(
+        stats["seconds"], 1e-9)
+    return stats
+
+
+def warmup_engine(cfg: "M.LMConfig", params, *, lanes: int,
+                  num_pages: int, max_pages_per_seq: int,
+                  use_pallas: bool = False):
+    """Compile the shared step executable at the run's exact shapes,
+    outside any timed region (one trivial request streamed through)."""
+    eng = ContinuousEngine(cfg, params, lanes=lanes, num_pages=num_pages,
+                           max_pages_per_seq=max_pages_per_seq,
+                           use_pallas=use_pallas)
+    eng.submit(Request(rid=0, prompt=np.zeros(2, np.int32),
+                       max_new_tokens=1))
+    eng.run()
+
+
+def equal_page_budget(lanes: int, prompt_len: int, max_new_cap: int,
+                      page_size: int):
+    """(max_pages_per_seq, num_pages) sized to what *static* batching
+    would reserve for a full worst-case batch (+ the null page). The
+    launch driver and the gated benchmark must share this sizing — the
+    'equal HBM page budget' claim is only a pure-scheduling comparison
+    if both compute it identically."""
+    per_seq = -(-(prompt_len + max_new_cap + 1) // page_size)
+    return per_seq, lanes * per_seq + 1
+
+
+def make_zipf_requests(vocab: int, rng, n: int, prompt_len: int, *,
+                       zipf_a: float = 1.8, max_new_cap: int = 64,
+                       min_new: int = 1) -> List[Request]:
+    """Ragged serving workload: equal prompts, Zipf-distributed response
+    lengths truncated to [min_new, max_new_cap] — the many-short /
+    few-very-long shape real traffic has, where a static batch drains at
+    the speed of its longest member (benchmarks/serve_continuous.py)."""
+    lens = np.clip(rng.zipf(zipf_a, n), min_new, max_new_cap)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, prompt_len).astype(
+                        np.int32),
+                    max_new_tokens=int(ln))
+            for i, ln in enumerate(lens)]
+
+
+class ContinuousEngine:
+    """Fixed-lane continuous-batching scheduler over one PagedKVCache."""
+
+    def __init__(self, cfg: M.LMConfig, params, *, lanes: int,
+                 num_pages: int, max_pages_per_seq: Optional[int] = None,
+                 mode: str = "continuous", use_pallas: bool = False,
+                 eos_id: Optional[int] = None, slice_=None):
+        if mode not in ("continuous", "static"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.cfg = cfg
+        self.params = params
+        self.mode = mode
+        self.eos_id = eos_id
+        self.n_lanes = lanes
+        self.cache = PagedKVCache(
+            num_pages=num_pages, page_size=cfg.page_size,
+            n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, max_pages_per_seq=max_pages_per_seq)
+        if slice_ is not None:
+            # the pool is the job's dominant long-lived HBM reservation
+            slice_.account_hbm("kv_pages", self.cache.hbm_bytes)
+        self._step_fn = _jitted_step(cfg, use_pallas)
+        self._ingest_fn = _jitted_ingest()
+        self.lanes: List[Optional[int]] = [None] * lanes
+        self.waiting: deque = deque()
+        self.requests: Dict[int, Request] = {}
+        self._next_input: Dict[int, int] = {}
+        self._cursor: Dict[int, int] = {}      # prompt tokens consumed
+        self._admit_order: Dict[int, int] = {}
+        self._admit_counter = itertools.count()
+        self.stats = {"steps": 0, "generated_tokens": 0,
+                      "prefill_tokens": 0, "ingested_tokens": 0,
+                      "preemptions": 0, "admissions": 0,
+                      "truncated": 0, "rejected": 0}
+
+    # -- submission -------------------------------------------------------
+    def submit(self, req: Request):
+        """Join on arrival: queued now, admitted at the next step."""
+        req.state = RequestState.WAITING
+        self.requests[req.rid] = req
+        self.waiting.append(req.rid)
+
+    def submit_many(self, reqs: Sequence[Request]):
+        for r in reqs:
+            self.submit(r)
+
+    # -- admission / eviction --------------------------------------------
+    def _effective_prompt(self, req: Request) -> np.ndarray:
+        """Recompute view: original prompt plus tokens generated before a
+        preemption (they re-enter as prompt; greedy decode regenerates
+        the identical continuation)."""
+        if not req.generated:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.generated, np.int32)])
+
+    def _admit(self):
+        if self.mode == "static" and any(s is not None for s in self.lanes):
+            return                      # static: drain the batch first
+        for lane in range(self.n_lanes):
+            if self.lanes[lane] is not None or not self.waiting:
+                continue
+            rid = self.waiting[0]
+            req = self.requests[rid]
+            prompt = self._effective_prompt(req)
+            # admission watermark: the prompt plus one decode token is
+            # *reserved* atomically, so a step that admits several
+            # sequences can't over-commit and joining never evicts
+            # running sequences mid-prefill (decode-phase growth beyond
+            # the reservation is what triggers preemption)
+            try:
+                self.cache.alloc_seq(rid, 0,
+                                     reserve_tokens=len(prompt) + 1)
+            except SequenceCapExceeded:
+                # the prompt alone can never fit this pool's per-seq
+                # cap: reject the request, don't wedge the queue
+                self.waiting.popleft()
+                req.state = RequestState.DONE
+                self.stats["rejected"] += 1
+                continue
+            except PageExhausted:
+                break               # head-of-queue blocks; FIFO holds
+            self.waiting.popleft()
+            self.lanes[lane] = rid
+            req.state = RequestState.PREFILL
+            req.prefills += 1
+            self._cursor[rid] = 0
+            self._next_input[rid] = int(prompt[0])
+            self._admit_order[rid] = next(self._admit_counter)
+            self.stats["admissions"] += 1
+
+    def _preempt(self, rid: int):
+        """Evict to the front of the queue; pages return to the pool."""
+        lane = self.lanes.index(rid)
+        self.cache.free_seq(rid)
+        self.lanes[lane] = None
+        req = self.requests[rid]
+        req.state = RequestState.WAITING
+        self.waiting.appendleft(rid)
+        for d in (self._next_input, self._cursor, self._admit_order):
+            d.pop(rid, None)
+        self.stats["preemptions"] += 1
+
+    def _make_room(self, rid: int) -> bool:
+        """Get append capacity for ``rid``, evicting youngest-first until
+        it fits. Returns False when ``rid`` left its lane instead: a
+        sequence at the per-sequence page cap is *truncated* (retired
+        with what it has — no eviction can grow it), and the requester
+        itself may be the eviction victim."""
+        while True:
+            try:
+                if self.cache.ensure_append(rid):
+                    return True
+            except SequenceCapExceeded:
+                self._retire(rid)
+                self.stats["truncated"] += 1
+                return False
+            active = [s for s in self.lanes if s is not None]
+            victim = max(active, key=self._admit_order.__getitem__)
+            if victim == rid and len(active) == 1:
+                raise PageExhausted(
+                    f"page budget cannot hold a single sequence "
+                    f"(seq {rid} at {self.cache.seq_len(rid)} tokens, "
+                    f"{self.cache.free_pages} pages free)")
+            self._preempt(victim)
+            if victim == rid:
+                return False
+
+    def _retire(self, rid: int):
+        lane = self.lanes.index(rid)
+        self.cache.free_seq(rid)
+        self.lanes[lane] = None
+        self.requests[rid].state = RequestState.DONE
+        for d in (self._next_input, self._cursor, self._admit_order):
+            d.pop(rid, None)
+
+    # -- the step ---------------------------------------------------------
+    def step(self) -> bool:
+        """Admit, make page room, run one fused lane-batch token step,
+        and account the outcome per lane. Returns False when idle."""
+        import jax.numpy as jnp
+
+        self._admit()
+        if all(s is None for s in self.lanes):
+            return False
+        for lane in range(self.n_lanes):
+            rid = self.lanes[lane]
+            if rid is not None:
+                self._make_room(rid)
+        B = self.n_lanes
+        tokens = np.zeros(B, np.int32)
+        write_page = np.zeros(B, np.int32)
+        write_off = np.zeros(B, np.int32)
+        for lane, rid in enumerate(self.lanes):
+            if rid is None:
+                continue
+            tokens[lane] = self._next_input[rid]
+            write_page[lane], write_off[lane] = self.cache.write_slot(rid)
+        table = self.cache.page_table(self.lanes)
+        kv_len = self.cache.kv_lens(self.lanes)
+        next_tok, _logits, self.cache.k, self.cache.v = self._step_fn(
+            self.params, self.cache.k, self.cache.v, jnp.asarray(tokens),
+            jnp.asarray(table), jnp.asarray(kv_len),
+            jnp.asarray(write_page), jnp.asarray(write_off))
+        next_tok = np.asarray(next_tok)
+        self.stats["steps"] += 1
+        for lane, rid in enumerate(self.lanes):
+            if rid is None:
+                continue
+            self.cache.advance(rid)
+            req = self.requests[rid]
+            if req.state is RequestState.PREFILL:
+                prompt = self._effective_prompt(req)
+                self.stats["prefill_tokens"] += 1
+                self._cursor[rid] += 1
+                if self._cursor[rid] < len(prompt):
+                    self._next_input[rid] = int(prompt[self._cursor[rid]])
+                    continue
+                req.state = RequestState.DECODE
+                # a recomputed sequence re-emits nothing: its "first"
+                # tokens already sit in req.generated
+                if len(req.generated) >= req.max_new_tokens:
+                    self._retire(rid)
+                    continue
+            self._append_token(rid, int(next_tok[lane]))
+        return True
+
+    def _append_token(self, rid: int, tok: int):
+        req = self.requests[rid]
+        req.generated.append(tok)
+        self.stats["generated_tokens"] += 1
+        self._next_input[rid] = tok
+        if (len(req.generated) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id)):
+            self._retire(rid)
+
+    # -- disaggregated-prefill ingestion ----------------------------------
+    @staticmethod
+    def _scatter_prompt(k_pages, v_pages, k, v, page_ids):
+        """k, v: (L, Hkv, T, Dh) one sequence's prompt KV; page_ids:
+        (n,) with n*page_size >= T. Pads T up to whole pages and lands
+        them in the pool in one scatter."""
+        import jax.numpy as jnp
+        L, Hkv, T, Dh = k.shape
+        n = page_ids.shape[0]
+        ps = k_pages.shape[3]
+        pad = n * ps - T
+
+        def blocks(x):
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            x = x.reshape(L, Hkv, n, ps, Dh)
+            return x.transpose(0, 2, 1, 3, 4)     # (L, n, Hkv, ps, Dh)
+
+        k_pages = k_pages.at[:, page_ids].set(blocks(k))
+        v_pages = v_pages.at[:, page_ids].set(blocks(v))
+        return k_pages, v_pages
+
+    def ingest_prefill(self, req: Request, k, v, last_logits):
+        """Admit a request whose prompt KV arrived from a disaggregated
+        prefill stage (the PR 2 fabric hop): allocate pages, scatter the
+        KV in, and enter DECODE directly — no prompt streaming. Requires
+        a free lane (the caller steps the engine until one frees)."""
+        import jax.numpy as jnp
+
+        if None not in self.lanes:
+            raise RuntimeError("no free lane; step() until one retires")
+        T = len(req.prompt)
+        rid = req.rid
+        # the reservation covers the first decode token too, so the
+        # eviction loop — not a crash — handles the exactly-full case;
+        # the request is registered only once pages are secured (an
+        # allocation failure must not leak a phantom requests entry)
+        while True:
+            try:
+                self.cache.alloc_seq(rid, T, reserve_tokens=T + 1)
+                break
+            except PageExhausted:
+                active = [s for s in self.lanes if s is not None]
+                if not active:
+                    raise
+                self._preempt(max(active,
+                                  key=self._admit_order.__getitem__))
+        self.requests[rid] = req
+        lane = self.lanes.index(None)
+        self.lanes[lane] = rid
+        page_ids = jnp.asarray(
+            self.cache.seq_pages(rid)[:self.cache.pages_for(T)],
+            jnp.int32)
+        self.cache.k, self.cache.v = self._ingest_fn(
+            self.cache.k, self.cache.v, k, v, page_ids)
+        req.state = RequestState.DECODE
+        req.prefills += 1
+        self._cursor[rid] = T
+        self._admit_order[rid] = next(self._admit_counter)
+        self.stats["ingested_tokens"] += T
+        self.stats["admissions"] += 1
+        self._append_token(rid, int(np.argmax(np.asarray(last_logits))))
+
+    # -- driver ------------------------------------------------------------
+    def run(self) -> dict:
+        """Drain everything submitted so far; returns the stats dict."""
+        while True:
+            if not self.step():
+                # step() already tried admission into an all-free engine;
+                # anything still waiting can never fit
+                if self.waiting:
+                    raise PageExhausted(
+                        "waiting requests cannot be admitted into an "
+                        "empty engine — page budget too small")
+                return dict(self.stats)

@@ -1,0 +1,228 @@
+"""Paged KV-cache block pool: the free-run allocator moves into HBM.
+
+One HBM block pool holds every sequence's KV state in fixed-size pages
+(page_size tokens x Hkv x head_dim, per layer); a sequence owns an ordered
+page list — its page table — and the paged decode kernel
+(kernels/paged_attention.py) gathers through it. Static per-sequence
+``max_len`` over-allocation (the monolithic provisioning the paper argues
+disaggregation eliminates) becomes pay-per-page: a sequence holds
+``ceil(len / page_size)`` pages, never more.
+
+Page ids are placed by the *same* ``FreeRunIndex`` that places
+accelerators in the fabric pool (core/pool.py, DESIGN.md §3) — one
+allocator abstraction for devices in the fabric and pages in HBM, and the
+index's O(log n) merge/split + best-fit invariants carry over unchanged
+(tests/test_serve_engine.py re-runs the invariant suite at page-sized
+configurations). Best-fit keeps a sequence's pages as contiguous as the
+pool allows, which on TPU turns the page gather into fewer, longer DMAs.
+
+Page 0 is reserved as the **null page**: padded page-table slots and
+masked (inactive-lane) writes land there, so every table slot is always a
+valid page id — the kernel prefetches a block's page before the kv_len
+mask is known. The null page is never allocated to a sequence.
+
+The arrays themselves (``k``, ``v``) are functional jax values: jitted
+step functions return updated pools and the engine swaps them in; this
+class owns only the *placement* metadata (who holds which page).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.pool import FreeRunIndex
+
+# all pages live in one bucket: a single HBM "pod" of kind "page"
+_BUCKET = (0, "page")
+
+
+class PageExhausted(RuntimeError):
+    """The pool cannot serve the allocation *right now*; the engine's
+    response is preempt-to-recompute (DESIGN.md §10), not a crash."""
+
+
+class SequenceCapExceeded(RuntimeError):
+    """The sequence itself exceeds ``max_pages_per_seq`` — a property of
+    the request, not of pool pressure: no eviction can fix it, so the
+    engine must truncate/reject that sequence rather than preempt
+    innocent neighbours."""
+
+
+class PagedKVCache:
+    """Placement metadata + backing arrays for one paged KV block pool."""
+
+    def __init__(self, *, num_pages: int, page_size: int, n_layers: int,
+                 n_kv_heads: int, head_dim: int, dtype=None,
+                 max_pages_per_seq: Optional[int] = None):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        import jax.numpy as jnp
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_seq = (max_pages_per_seq
+                                  if max_pages_per_seq is not None
+                                  else num_pages - 1)
+        self._index = FreeRunIndex()
+        self._index.add_range(_BUCKET, 1, num_pages)   # 0 = null page
+        self._pages: Dict[int, List[int]] = {}          # seq -> page ids
+        self._len: Dict[int, int] = {}                  # seq -> tokens held
+        dtype = dtype if dtype is not None else jnp.float32
+        shape = (n_layers, num_pages, n_kv_heads, page_size, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+
+    # -- pool-level queries ----------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return self._index.free_count("page")
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - self.free_pages
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Bytes of HBM the block pool pins (what the owning slice
+        accounts via ``Slice.account_hbm``)."""
+        return self.k.nbytes + self.v.nbytes
+
+    def fragmentation(self) -> float:
+        free = self._index.free_count("page")
+        if free <= 0:
+            return 0.0
+        return 1.0 - self._index.largest_run("page") / free
+
+    def free_runs(self):
+        return self._index.snapshot().get(_BUCKET, [])
+
+    # -- per-sequence placement ------------------------------------------
+    def _take(self, n: int) -> List[int]:
+        """Allocate n page ids: best-fit contiguous when a run exists,
+        lowest-id spill across runs otherwise (same policy ladder as
+        DevicePool.acquire)."""
+        if self._index.free_count("page") < n:
+            raise PageExhausted(
+                f"need {n} pages, {self._index.free_count('page')} free")
+        run = self._index.best_fit(n, "page")
+        if run is not None:
+            start = run[0]
+            self._index.remove_range(_BUCKET, start, start + n)
+            return list(range(start, start + n))
+        ids: List[int] = []
+        for rs, re in self._index.runs_ascending("page"):
+            take = min(n - len(ids), re - rs)
+            ids.extend(range(rs, rs + take))
+            if len(ids) == n:
+                break
+        for rs, re in _spans(ids):
+            self._index.remove_range(_BUCKET, rs, re)
+        return ids
+
+    def _give_back(self, ids: Sequence[int]):
+        for rs, re in _spans(sorted(ids)):
+            self._index.add_range(_BUCKET, rs, re)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size) if n_tokens > 0 else 0
+
+    def alloc_seq(self, seq_id: int, n_tokens: int = 0,
+                  reserve_tokens: int = 0):
+        """Admit a sequence holding ``n_tokens`` (its prompt length when
+        prefill KV is ingested in one shot; 0 when tokens stream in).
+        ``reserve_tokens`` pre-allocates pages for tokens that will be
+        written over the coming steps (a streaming prefill's prompt), so
+        admission is atomic: either the whole reservation fits in free
+        pages *now*, or PageExhausted — a joining sequence can never pass
+        an availability check that a sibling admitted the same step
+        already consumed."""
+        if seq_id in self._pages:
+            raise KeyError(f"seq {seq_id} already allocated")
+        need = self.pages_for(max(n_tokens, reserve_tokens))
+        if need > self.max_pages_per_seq:
+            raise SequenceCapExceeded(
+                f"seq needs {need} pages > max_pages_per_seq="
+                f"{self.max_pages_per_seq}")
+        self._pages[seq_id] = self._take(need) if need else []
+        self._len[seq_id] = n_tokens
+
+    def ensure_append(self, seq_id: int) -> bool:
+        """Make room for one more token: allocates a fresh page when the
+        sequence's last page is full. False (state untouched) when the
+        *pool* is exhausted — the caller preempts somebody and retries.
+        Raises SequenceCapExceeded when the sequence itself is at
+        ``max_pages_per_seq``: eviction cannot help, the caller must
+        truncate or reject this sequence."""
+        pages = self._pages[seq_id]
+        if self._len[seq_id] < len(pages) * self.page_size:
+            return True
+        if len(pages) >= self.max_pages_per_seq:
+            raise SequenceCapExceeded(
+                f"seq {seq_id} at max_pages_per_seq="
+                f"{self.max_pages_per_seq}")
+        try:
+            pages.extend(self._take(1))
+        except PageExhausted:
+            return False
+        return True
+
+    def advance(self, seq_id: int, n: int = 1):
+        """Record ``n`` tokens written (capacity must already exist)."""
+        new_len = self._len[seq_id] + n
+        assert new_len <= len(self._pages[seq_id]) * self.page_size, (
+            f"seq {seq_id}: advance past allocated pages")
+        self._len[seq_id] = new_len
+
+    def free_seq(self, seq_id: int):
+        """Retire (or evict) a sequence; its pages merge back into runs."""
+        self._give_back(self._pages.pop(seq_id))
+        del self._len[seq_id]
+
+    def seq_len(self, seq_id: int) -> int:
+        return self._len[seq_id]
+
+    def seq_pages(self, seq_id: int) -> List[int]:
+        return list(self._pages[seq_id])
+
+    def has_seq(self, seq_id: int) -> bool:
+        return seq_id in self._pages
+
+    # -- kernel-facing views ---------------------------------------------
+    def write_slot(self, seq_id: int) -> tuple:
+        """(page_id, offset) where the sequence's *next* token lands."""
+        pos = self._len[seq_id]
+        pages = self._pages[seq_id]
+        return pages[pos // self.page_size], pos % self.page_size
+
+    def page_table(self, seq_ids: Sequence[Optional[int]],
+                   max_pages: Optional[int] = None) -> np.ndarray:
+        """(B, max_pages) int32 table for a batch of lanes; None lanes
+        and slots past a sequence's pages pad with the null page 0."""
+        if max_pages is None:
+            max_pages = self.max_pages_per_seq
+        out = np.zeros((len(seq_ids), max_pages), np.int32)
+        for i, sid in enumerate(seq_ids):
+            if sid is None:
+                continue
+            ids = self._pages[sid]
+            if len(ids) > max_pages:
+                raise ValueError(f"seq {sid} holds {len(ids)} pages > "
+                                 f"table width {max_pages}")
+            out[i, :len(ids)] = ids
+        return out
+
+    def kv_lens(self, seq_ids: Sequence[Optional[int]]) -> np.ndarray:
+        """(B,) int32 live lengths; None lanes are 0."""
+        return np.array([0 if sid is None else self._len[sid]
+                         for sid in seq_ids], np.int32)
+
+
+def _spans(ids: Sequence[int]):
+    """Maximal contiguous [start, end) spans of an ascending id list."""
+    spans = []
+    for i in ids:
+        if spans and spans[-1][1] == i:
+            spans[-1][1] = i + 1
+        else:
+            spans.append([i, i + 1])
+    return [(a, b) for a, b in spans]

@@ -1,0 +1,171 @@
+"""Paged-cache reference LM for the serving plane (DESIGN.md §10).
+
+A deliberately small GQA transformer whose decode path reads KV through
+the paged block pool: the per-step attention is
+``kernels/paged_attention.py`` (Pallas on TPU, jnp twin on CPU), and new
+K/V land directly in pool pages via a scatter at the lane's
+``(write_page, write_offset)`` slot. It exists so the continuous-batching
+engine's scheduling claims are measured against a real autoregressive
+decode — token t+1's inputs depend on token t through the cache — rather
+than a sleep-based stand-in, while staying small enough that CPU CI runs
+thousands of steps.
+
+Every per-lane computation is row-independent (embedding lookup, per-row
+matmuls, per-row masked softmax over that row's own pages), which is the
+property that makes continuous batching *bit-identical* per request to
+static batching — the scheduler can't change anyone's tokens, only when
+they are computed. tests/test_serve_engine.py pins this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import (paged_attention_jnp,
+                                           paged_decode_attention_fwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 128
+    d_model: int = 32
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 8
+    n_layers: int = 2
+    page_size: int = 8
+    window: Optional[int] = None
+    softcap: Optional[float] = None
+    rope_base: float = 10000.0
+    norm_eps: float = 1e-6
+
+
+def init(cfg: LMConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d, L = cfg.d_model, cfg.n_layers
+    dq = cfg.n_heads * cfg.head_dim
+    dkv = cfg.n_kv_heads * cfg.head_dim
+
+    def w(k, shape, fan_in):
+        return jax.random.normal(k, shape) / jnp.sqrt(fan_in)
+
+    return {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, d)) * 0.5,
+        "wq": w(ks[1], (L, d, dq), d),
+        "wkv": w(ks[2], (L, d, 2 * dkv), d),
+        "wo": w(ks[3], (L, dq, d), dq),
+        "w1": w(ks[4], (L, d, 2 * d), d),
+        "w2": w(ks[5], (L, 2 * d, d), 2 * d),
+    }
+
+
+def _norm(cfg: LMConfig, x):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + cfg.norm_eps)
+
+
+def _rope(cfg: LMConfig, x, pos):
+    """x: (..., S, H, Dh); pos: broadcastable to (..., S)."""
+    half = cfg.head_dim // 2
+    freqs = cfg.rope_base ** (-jnp.arange(half) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x1 * sin + x2 * cos], -1).astype(x.dtype)
+
+
+def _qkv(cfg: LMConfig, params, layer, xn, pos):
+    """xn: (B, S, d) normed activations; pos broadcastable to (B, S).
+    Returns roped q (B, S, Hq, Dh), k, v (B, S, Hkv, Dh)."""
+    B, S, _ = xn.shape
+    q = (xn @ params["wq"][layer]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    kv = xn @ params["wkv"][layer]
+    k, v = jnp.split(kv, 2, axis=-1)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    return _rope(cfg, q, pos), _rope(cfg, k, pos), v
+
+
+def _mlp(cfg: LMConfig, params, layer, x):
+    h = jax.nn.silu(_norm(cfg, x) @ params["w1"][layer])
+    return x + h @ params["w2"][layer]
+
+
+def decode_step(cfg: LMConfig, params, k_pages, v_pages, tokens,
+                page_table, kv_len, write_page, write_off, *,
+                use_pallas: bool = False):
+    """One token per lane against the paged pool.
+
+    tokens: (B,) int32 input token per lane (a prompt token while the
+    lane prefills, the previous output while it decodes); page_table:
+    (B, max_pages) int32; kv_len: (B,) tokens held *before* this step;
+    write_page/write_off: (B,) slot where this token's K/V land (the
+    null page 0 for inactive lanes). Returns (next_token (B,), logits
+    (B, V), k_pages, v_pages)."""
+    x = params["embed"][tokens][:, None, :]               # (B, 1, d)
+    pos = kv_len[:, None]                                 # (B, 1)
+    for layer in range(cfg.n_layers):
+        xn = _norm(cfg, x)
+        q, k_new, v_new = _qkv(cfg, params, layer, xn, pos)
+        # land this token's K/V in its pool slot; inactive lanes all hit
+        # the null page, where last-write-wins garbage is never read
+        k_pages = k_pages.at[layer, write_page, :, write_off, :].set(
+            k_new[:, 0])
+        v_pages = v_pages.at[layer, write_page, :, write_off, :].set(
+            v_new[:, 0])
+        attn_fn = (functools.partial(paged_decode_attention_fwd,
+                                     interpret=True)
+                   if use_pallas else paged_attention_jnp)
+        attn = attn_fn(q.transpose(0, 2, 1, 3), k_pages[layer],
+                       v_pages[layer], page_table, kv_len + 1, kv_len,
+                       window=cfg.window, softcap=cfg.softcap)
+        attn = attn.transpose(0, 2, 1, 3).reshape(
+            x.shape[0], 1, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ params["wo"][layer]
+        x = _mlp(cfg, params, layer, x)
+    logits = (_norm(cfg, x) @ params["embed"].T)[:, 0]    # (B, V)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, \
+        k_pages, v_pages
+
+
+def prefill(cfg: LMConfig, params, prompts):
+    """Full-sequence prompt pass (the disaggregated prefill stage's
+    compute): prompts (b, T) int32 -> (k, v) each
+    (n_layers, b, Hkv, T, Dh) post-RoPE — exactly what decode_step would
+    have written token-by-token — plus last-position logits (b, V)."""
+    b, T = prompts.shape
+    x = params["embed"][prompts]                          # (b, T, d)
+    pos = jnp.arange(T)[None, :]
+    i = jnp.arange(T)
+    mask = i[None, :] <= i[:, None]                       # causal (T, T)
+    if cfg.window is not None:
+        mask &= (i[:, None] - i[None, :]) < cfg.window
+    ks, vs = [], []
+    for layer in range(cfg.n_layers):
+        xn = _norm(cfg, x)
+        q, k, v = _qkv(cfg, params, layer, xn, pos)
+        ks.append(k.transpose(0, 2, 1, 3))                # (b, Hkv, T, Dh)
+        vs.append(v.transpose(0, 2, 1, 3))
+        G = cfg.n_heads // cfg.n_kv_heads
+        kk = jnp.repeat(ks[-1], G, axis=1).astype(jnp.float32)
+        vv = jnp.repeat(vs[-1], G, axis=1).astype(jnp.float32)
+        qt = q.transpose(0, 2, 1, 3).astype(jnp.float32)  # (b, Hq, T, Dh)
+        s = jnp.einsum("bhsd,bhtd->bhst", qt, kk) / jnp.sqrt(
+            jnp.float32(cfg.head_dim))
+        if cfg.softcap is not None:
+            s = jnp.tanh(s / cfg.softcap) * cfg.softcap
+        s = jnp.where(mask[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("bhst,bhtd->bhsd", p, vv).astype(x.dtype)
+        attn = attn.transpose(0, 2, 1, 3).reshape(
+            b, T, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ params["wo"][layer]
+        x = _mlp(cfg, params, layer, x)
+    logits = _norm(cfg, x) @ params["embed"].T            # (b, T, V)
+    return jnp.stack(ks), jnp.stack(vs), logits[:, -1]

@@ -14,6 +14,7 @@ import benchmarks.roofline as roofline
 import benchmarks.run as bench_run
 import benchmarks.scaling as scaling
 import benchmarks.sched_scale as sched_scale
+import benchmarks.serve_continuous as serve_continuous
 import benchmarks.sharing as sharing
 
 # one source of truth for the smoke shapes: benchmarks/run.py --smoke
@@ -30,6 +31,7 @@ TINY = [
         ("roofline", roofline), ("sched_scale", sched_scale),
         ("pipeline_overlap", pipeline_overlap),
         ("preempt_frag", preempt_frag),
+        ("serve_continuous", serve_continuous),
     ]
 ]
 
@@ -115,6 +117,7 @@ def test_check_regression_committed_records_parse():
     assert any(k.startswith("pipeline/overlap") for k in committed)
     assert any(k.startswith("preempt/speedup") for k in committed)
     assert any(k.startswith("defrag/largest_run_ratio") for k in committed)
+    assert any(k.startswith("serve/speedup") for k in committed)
     for name, (value, direction) in committed.items():
         assert value > 0 and direction in ("lower", "higher"), name
     # acceptance floor: the committed preemption record must show the
@@ -122,6 +125,10 @@ def test_check_regression_committed_records_parse():
     for name, (value, _) in committed.items():
         if name.startswith("preempt/speedup"):
             assert value >= 10.0, f"{name} committed below 10x: {value}"
+        # acceptance floor: continuous batching >= 2x static tokens/sec
+        # on the committed Zipf workload at equal page budget
+        if name.startswith("serve/speedup"):
+            assert value >= 2.0, f"{name} committed below 2x: {value}"
 
 
 def test_check_regression_gate_smoke():
@@ -134,7 +141,8 @@ def test_check_regression_gate_smoke():
                           n_jobs=8, jobs_pool=64),
         pipe_kwargs=dict(stage_counts=(4,), microbatches=(1, 8),
                          compute_s=0.005, iters=1),
-        preempt_kwargs=TINY_PREEMPT)
+        preempt_kwargs=TINY_PREEMPT,
+        serve_kwargs=bench_run.SMOKE_KWARGS["serve_continuous"])
     assert fails == [], f"gate smoke failed: {fails}"
 
 
@@ -147,5 +155,6 @@ def test_check_regression_fails_loud_without_records(tmp_path):
                           n_jobs=4, jobs_pool=16),
         pipe_kwargs=dict(stage_counts=(2,), microbatches=(1, 2),
                          batch=8, compute_s=0.002, iters=1),
-        preempt_kwargs=TINY_PREEMPT)
+        preempt_kwargs=TINY_PREEMPT,
+        serve_kwargs=bench_run.SMOKE_KWARGS["serve_continuous"])
     assert len(fails) == 1 and "no gated rows" in fails[0]

@@ -116,6 +116,68 @@ def test_decode_attention_window():
                                rtol=2e-5)
 
 
+@pytest.mark.parametrize("seed", range(4))
+def test_decode_attention_block_boundary_ragged(seed):
+    """Randomized parity at kv_len exactly on / one off a block boundary
+    — the ragged edges the paged kernel must also pass (a block whose
+    last row is the only valid one, and a block that is entirely dead
+    but still iterated)."""
+    import random
+    rng = random.Random(seed)
+    B, Hq, Hkv, D, bkv = 4, 4, 2, 32, 64
+    T = 256
+    ks = jax.random.split(jax.random.PRNGKey(100 + seed), 3)
+    q = rand(ks[0], (B, Hq, 1, D))
+    k = rand(ks[1], (B, Hkv, T, D))
+    v = rand(ks[2], (B, Hkv, T, D))
+    boundary = bkv * rng.randint(1, T // bkv)
+    lens = [boundary, max(boundary - 1, 1), min(boundary + 1, T),
+            rng.randint(1, T)]
+    kv_len = jnp.array(lens, jnp.int32)
+    q_pos = jnp.array([T - 1], jnp.int32)
+    out = decode_attention_fwd(q, k, v, kv_len, q_pos, bkv=bkv)
+    exp = ref.attention_ref(q, k, v, causal=True, kv_len=kv_len,
+                            q_pos=q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_minimal_cache():
+    """kv_len=1 / q_pos=0 — a cache holding only the current token, on a
+    single-block grid: the softmax must normalize over exactly one
+    score, so the output is that token's value row."""
+    B, Hq, Hkv, T, D = 2, 2, 1, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = rand(ks[0], (B, Hq, 1, D))
+    k = rand(ks[1], (B, Hkv, T, D))
+    v = rand(ks[2], (B, Hkv, T, D))
+    kv_len = jnp.array([1, 1], jnp.int32)
+    q_pos = jnp.array([0], jnp.int32)
+    out = decode_attention_fwd(q, k, v, kv_len, q_pos, bkv=128)
+    exp = jnp.broadcast_to(v[:, :, 0][:, :, None], (B, Hkv, 1, D))
+    exp = jnp.repeat(exp, Hq // Hkv, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_window_softcap_combined():
+    """Sliding window + logit softcap together, over ragged kv_len that
+    straddles a block boundary — the config the paged kernel inherits."""
+    B, Hq, Hkv, T, D = 3, 4, 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = rand(ks[0], (B, Hq, 1, D))
+    k = rand(ks[1], (B, Hkv, T, D))
+    v = rand(ks[2], (B, Hkv, T, D))
+    kv_len = jnp.array([128, 127, 129], jnp.int32)
+    q_pos = jnp.array([128], jnp.int32)
+    out = decode_attention_fwd(q, k, v, kv_len, q_pos, window=48,
+                               softcap=25.0, bkv=128)
+    exp = ref.attention_ref(q, k, v, causal=True, window=48, softcap=25.0,
+                            kv_len=kv_len, q_pos=q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # SSD scan
 # ---------------------------------------------------------------------------

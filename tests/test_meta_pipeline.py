@@ -150,6 +150,74 @@ def test_transfer_log_thread_safe():
         meta.release(slices)
 
 
+def test_link_concurrent_streams_share_bandwidth():
+    """Two overlapping transfer_async calls on one fabric edge must each
+    see ~half the modeled bandwidth (fluid fair share), not each be
+    timed as if alone on the wire. Modeled delays are floors served by
+    sleeps, so a loaded host can only make times longer — the shared-
+    bandwidth lower bound cannot flake false-positive."""
+    import time
+    pool = _real_pool(2)
+    # 4 MB at 0.05 GB/s: ~84 ms modeled single-stream wire time
+    meta = MetaAccelerator(pool, link=LinkModel(gbytes_per_s=0.05))
+    stages = _stages([None])
+    slices = meta.allocate(stages)
+    x = np.ones((1024, 1024), np.float32)
+    single_model = meta.link.delay_s(x.nbytes)
+    try:
+        t0 = time.perf_counter()
+        meta.transfer(slices[0], x, "solo")
+        solo = time.perf_counter() - t0
+        assert solo >= 0.95 * single_model, "solo hop undershot the model"
+
+        # register both streams from this thread (transfer_async starts
+        # occupying the edge at issue), so overlap is guaranteed no
+        # matter how the completion threads get scheduled
+        t0 = time.perf_counter()
+        _, c1 = meta.transfer_async(slices[0], x, "pair")
+        _, c2 = meta.transfer_async(slices[0], x, "pair")
+        threads = [threading.Thread(target=c) for c in (c1, c2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        both = time.perf_counter() - t0
+        # two fully-overlapped streams drain in 2x the single-stream
+        # model (each at bandwidth/2)
+        assert both >= 1.8 * single_model, (
+            f"overlapped pair finished in {both:.3f}s vs single-stream "
+            f"model {single_model:.3f}s: bandwidth was not shared")
+        tot = meta.transfer_totals()
+        assert tot["hops"] == 3 and tot["bytes"] == 3 * x.nbytes
+    finally:
+        meta.release(slices)
+
+
+def test_link_serialized_streams_keep_full_bandwidth():
+    """Back-to-back (non-overlapping) hops on the same edge must each
+    still pay only the single-stream wire time — sharing applies to
+    in-flight streams only. Asserted on the edge's stream state (a
+    drained stream must leave the fluid model) rather than a wall-clock
+    upper bound, which would flake on a stalled CI host; release() must
+    then drop the edge entirely so a recycled Slice id can't inherit
+    stream state."""
+    pool = _real_pool(2)
+    meta = MetaAccelerator(pool, link=LinkModel(gbytes_per_s=0.2))
+    stages = _stages([None])
+    slices = meta.allocate(stages)
+    x = np.ones((512, 1024), np.float32)
+    try:
+        for _ in range(2):
+            meta.transfer(slices[0], x, "serial")
+            edge = meta._edges[id(slices[0])]
+            assert edge.streams == {}, (
+                "a completed hop left its stream in the fluid model — "
+                "the next hop would wrongly run at bw/2")
+    finally:
+        meta.release(slices)
+    assert meta._edges == {}, "release() must drop per-slice edges"
+
+
 def test_release_runs_lifecycle_teardown():
     """Slices must end DESTROYED (not a dead ATTACHED/LAUNCHED husk),
     with the teardown transitions timed."""

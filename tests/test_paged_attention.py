@@ -1,0 +1,143 @@
+"""Paged decode kernel (DESIGN.md §10): numerical equivalence to the
+contiguous decode_attention kernel across randomized page tables, ragged
+kv_len (block-boundary edges included), sliding windows and softcap —
+plus the jnp twin the CPU engine jits, and null-page content isolation.
+"""
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.paged_attention import (gather_kv, paged_attention_jnp,
+                                           paged_decode_attention_fwd)
+
+
+def scatter_to_pages(k, v, ps, rng):
+    """Scatter contiguous (B, Hkv, T, D) KV into randomly permuted pool
+    pages; returns (k_pages, v_pages, page_table) with page 0 reserved
+    as the null page."""
+    B, Hkv, T, D = k.shape
+    maxp = T // ps
+    num_pages = B * maxp + 1
+    order = list(range(1, num_pages))
+    rng.shuffle(order)
+    table = np.asarray(order, np.int32).reshape(B, maxp)
+    k_pages = np.zeros((num_pages, Hkv, ps, D), np.float32)
+    v_pages = np.zeros_like(k_pages)
+    for b in range(B):
+        for j in range(maxp):
+            k_pages[table[b, j]] = np.asarray(k[b, :, j * ps:(j + 1) * ps])
+            v_pages[table[b, j]] = np.asarray(v[b, :, j * ps:(j + 1) * ps])
+    return jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(table)
+
+
+def contiguous_ref(q, k, v, kv_len, q_pos, **kw):
+    """Per-sequence contiguous decode kernel (scalar q_pos each) — the
+    ground truth the paged kernel must reproduce bit-for-tolerance."""
+    outs = [decode_attention_fwd(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                 kv_len[b:b + 1], q_pos[b:b + 1], **kw)
+            for b in range(q.shape[0])]
+    return jnp.concatenate(outs, axis=0)
+
+
+def make_case(seed, B=3, Hq=4, Hkv=2, D=32, ps=16, maxp=6):
+    rng = random.Random(seed)
+    T = maxp * ps
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Hq, 1, D))
+    k = jax.random.normal(ks[1], (B, Hkv, T, D))
+    v = jax.random.normal(ks[2], (B, Hkv, T, D))
+    # ragged lengths biased onto page boundaries (the edge that breaks
+    # naive block masking): exactly-on, one-off, and uniform draws
+    lens = []
+    for _ in range(B):
+        edge = ps * rng.randint(1, maxp)
+        lens.append(rng.choice(
+            [edge, max(edge - 1, 1), min(edge + 1, T),
+             rng.randint(1, T)]))
+    kv_len = jnp.asarray(lens, jnp.int32)
+    q_pos = kv_len - 1          # each lane decodes at its own position
+    k_pages, v_pages, table = scatter_to_pages(k, v, ps, rng)
+    return q, k, v, kv_len, q_pos, k_pages, v_pages, table, ps
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_paged_matches_contiguous_randomized(seed):
+    q, k, v, kv_len, q_pos, kp, vp, table, ps = make_case(seed)
+    exp = contiguous_ref(q, k, v, kv_len, q_pos, bkv=ps)
+    out = paged_decode_attention_fwd(q, kp, vp, table, kv_len, q_pos)
+    twin = paged_attention_jnp(q, kp, vp, table, kv_len, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(twin), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window,softcap", [(24, None), (None, 20.0),
+                                            (24, 20.0)])
+def test_paged_window_softcap(window, softcap):
+    q, k, v, kv_len, q_pos, kp, vp, table, ps = make_case(7)
+    kw = dict(window=window, softcap=softcap)
+    exp = contiguous_ref(q, k, v, kv_len, q_pos, bkv=ps, **kw)
+    out = paged_decode_attention_fwd(q, kp, vp, table, kv_len, q_pos, **kw)
+    twin = paged_attention_jnp(q, kp, vp, table, kv_len, q_pos, **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(twin), np.asarray(exp),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_gqa_and_mha_groups():
+    for Hq, Hkv in [(4, 4), (8, 2), (3, 1)]:
+        q, k, v, kv_len, q_pos, kp, vp, table, ps = make_case(
+            11, Hq=Hq, Hkv=Hkv, maxp=4)
+        exp = contiguous_ref(q, k, v, kv_len, q_pos, bkv=ps)
+        out = paged_decode_attention_fwd(q, kp, vp, table, kv_len, q_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_null_page_content_is_never_read():
+    """Padded table slots point at page 0; poisoning it (and every
+    unreferenced page) must not change any output — the kv_len mask, not
+    page contents, is the correctness boundary. This is what makes the
+    engine's null-page write trick safe."""
+    q, k, v, kv_len, q_pos, kp, vp, table, ps = make_case(13)
+    # shorten every sequence so trailing table slots are dead, then
+    # repoint the dead slots at the null page like the engine does
+    kv_len = jnp.minimum(kv_len, 2 * ps - 1)
+    q_pos = kv_len - 1
+    table = np.asarray(table).copy()
+    table[:, 2:] = 0
+    table = jnp.asarray(table)
+    base = paged_attention_jnp(q, kp, vp, table, kv_len, q_pos)
+    base_pal = paged_decode_attention_fwd(q, kp, vp, table, kv_len, q_pos)
+    live = np.unique(np.asarray(table[:, :2]))
+    poison_k = np.asarray(kp).copy()
+    poison_v = np.asarray(vp).copy()
+    dead = [p for p in range(kp.shape[0]) if p not in live]
+    poison_k[dead] = 1e9
+    poison_v[dead] = -1e9
+    out = paged_attention_jnp(q, jnp.asarray(poison_k),
+                              jnp.asarray(poison_v), table, kv_len, q_pos)
+    out_pal = paged_decode_attention_fwd(
+        q, jnp.asarray(poison_k), jnp.asarray(poison_v), table, kv_len,
+        q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=0, rtol=0)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(base_pal),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gather_kv_roundtrip():
+    """gather_kv through the page table reassembles the contiguous
+    cache exactly."""
+    _, k, v, _, _, kp, vp, table, ps = make_case(17)
+    np.testing.assert_array_equal(np.asarray(gather_kv(kp, table)),
+                                  np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(gather_kv(vp, table)),
+                                  np.asarray(v))

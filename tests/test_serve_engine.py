@@ -1,0 +1,363 @@
+"""Serving plane (DESIGN.md §10): the paged KV block pool reusing the PR 1
+free-run index (invariants re-run at page-sized configurations), and the
+continuous-batching engine — scheduling must never change tokens, only
+when they are computed (continuous == static == preempted bit-for-bit).
+"""
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pool import FreeRunIndex
+from repro.serve import (ContinuousEngine, LMConfig, PagedKVCache,
+                         PageExhausted, Request, RequestState,
+                         make_zipf_requests)
+from repro.serve import model as PM
+
+
+# ---------------------------------------------------------------------------
+# free-run index at page-sized configurations
+# ---------------------------------------------------------------------------
+
+def check_cache_index(cache):
+    """The cache's index runs must equal a brute-force recomputation from
+    ownership state (same invariant as tests/test_pool_index.py, with
+    uids = page ids and a single (0, "page") bucket)."""
+    owned = {p for pages in cache._pages.values() for p in pages}
+    free = [p for p in range(1, cache.num_pages) if p not in owned]
+    runs, start, prev = [], None, None
+    for p in free:
+        if start is None:
+            start = prev = p
+        elif p == prev + 1:
+            prev = p
+        else:
+            runs.append((start, prev + 1))
+            start = prev = p
+    if start is not None:
+        runs.append((start, prev + 1))
+    assert cache.free_runs() == runs
+    assert cache.free_pages == len(free)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_page_index_invariants(seed):
+    """Randomized alloc/append/free walk: the index stays byte-identical
+    to brute force, page 0 is never handed out, and no page is owned by
+    two sequences."""
+    rng = random.Random(seed)
+    ps = rng.choice([4, 8, 16])
+    cache = PagedKVCache(num_pages=rng.choice([16, 33, 64]), page_size=ps,
+                         n_layers=1, n_kv_heads=1, head_dim=4,
+                         max_pages_per_seq=rng.choice([4, 8]))
+    live = []
+    for sid in range(60):
+        op = rng.random()
+        if op < 0.5:
+            try:
+                cache.alloc_seq(sid, rng.randint(0, 3 * ps))
+                live.append(sid)
+            except PageExhausted:
+                pass
+        elif op < 0.8 and live:
+            grow = rng.choice(live)
+            if cache.ensure_append(grow):
+                cache.advance(grow)
+        elif live:
+            cache.free_seq(live.pop(rng.randrange(len(live))))
+        check_cache_index(cache)
+        owned = [p for pages in cache._pages.values() for p in pages]
+        assert 0 not in owned, "null page leaked to a sequence"
+        assert len(owned) == len(set(owned)), "page double-owned"
+    for sid in list(live):
+        cache.free_seq(sid)
+        check_cache_index(cache)
+    assert cache.free_runs() == [(1, cache.num_pages)], \
+        "drained pool must merge into one run"
+
+
+def test_page_allocator_is_the_pool_index():
+    """No second allocator implementation: the cache's placement state IS
+    a core FreeRunIndex instance."""
+    cache = PagedKVCache(num_pages=8, page_size=4, n_layers=1,
+                         n_kv_heads=1, head_dim=4)
+    assert isinstance(cache._index, FreeRunIndex)
+
+
+def test_best_fit_keeps_pages_contiguous():
+    cache = PagedKVCache(num_pages=17, page_size=4, n_layers=1,
+                         n_kv_heads=1, head_dim=4)
+    cache.alloc_seq(0, 8)     # pages 1-2
+    cache.alloc_seq(1, 16)    # pages 3-6
+    cache.free_seq(0)         # hole of 2 at the front
+    cache.alloc_seq(2, 8)     # best-fit: exactly the 2-page hole
+    assert cache.seq_pages(2) == [1, 2]
+    cache.alloc_seq(3, 12)    # 3 pages from the tail run
+    assert cache.seq_pages(3) == [7, 8, 9]
+
+
+def test_write_slot_and_table_padding():
+    cache = PagedKVCache(num_pages=9, page_size=4, n_layers=1,
+                         n_kv_heads=1, head_dim=4, max_pages_per_seq=3)
+    cache.alloc_seq(5, 0)
+    assert cache.ensure_append(5)
+    page0 = cache.seq_pages(5)[0]
+    assert cache.write_slot(5) == (page0, 0)
+    for _ in range(4):
+        assert cache.ensure_append(5)
+        cache.advance(5)
+    assert cache.seq_len(5) == 4
+    assert len(cache.seq_pages(5)) == 1       # page exactly full
+    assert cache.ensure_append(5)             # token 5 needs a new page
+    assert len(cache.seq_pages(5)) == 2
+    assert cache.write_slot(5) == (cache.seq_pages(5)[1], 0)
+    table = cache.page_table([5, None], max_pages=3)
+    assert table.shape == (2, 3)
+    assert list(table[0][:2]) == cache.seq_pages(5)
+    assert table[0][2] == 0 and (table[1] == 0).all()
+    assert list(cache.kv_lens([5, None])) == [4, 0]
+
+
+# ---------------------------------------------------------------------------
+# engine scheduling
+# ---------------------------------------------------------------------------
+
+CFG = LMConfig()
+PARAMS = PM.init(CFG, jax.random.PRNGKey(0))
+
+
+def _requests(seed=1, n=8, max_new=(1, 12), prompt=(3, 9)):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, CFG.vocab, int(
+                        rng.integers(*prompt))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(*max_new)))
+            for i in range(n)]
+
+
+def _engine(mode="continuous", lanes=4, num_pages=64, maxp=8):
+    return ContinuousEngine(CFG, PARAMS, lanes=lanes, num_pages=num_pages,
+                            max_pages_per_seq=maxp, mode=mode)
+
+
+def _tokens(reqs):
+    return {r.rid: list(r.generated) for r in reqs}
+
+
+def test_continuous_equals_static_tokens():
+    """The scheduler may only change *when* a token is computed, never
+    its value: per-lane math is row-independent, so continuous batching
+    is bit-identical to the static-batch baseline."""
+    rc, rs = _requests(), _requests()
+    ec, es = _engine("continuous"), _engine("static")
+    ec.submit_many(rc)
+    es.submit_many(rs)
+    sc, ss = ec.run(), es.run()
+    assert _tokens(rc) == _tokens(rs)
+    assert all(r.state is RequestState.DONE for r in rc + rs)
+    assert sc["generated_tokens"] == ss["generated_tokens"]
+    assert sc["steps"] < ss["steps"], (
+        "continuous batching must finish the ragged workload in fewer "
+        f"lane-steps ({sc['steps']} vs {ss['steps']})")
+
+
+def test_preempt_to_recompute_bit_exact():
+    """Page exhaustion evicts the youngest sequence; its prompt + tokens
+    so far re-enter as a recompute, and greedy decode regenerates the
+    identical continuation — the token-history analogue of FlowOS-RM's
+    checkpoint-preempt."""
+    reqs = _requests(seed=3, n=6, max_new=(20, 30), prompt=(3, 7))
+    big = _engine(num_pages=64)
+    big.submit_many(reqs)
+    big.run()
+    expected = _tokens(reqs)
+
+    reqs2 = _requests(seed=3, n=6, max_new=(20, 30), prompt=(3, 7))
+    tight = _engine(num_pages=12)    # growth must evict someone
+    tight.submit_many(reqs2)
+    stats = tight.run()
+    assert stats["preemptions"] > 0, "tight budget never preempted"
+    assert any(r.prefills > 1 for r in reqs2), "no recompute happened"
+    assert _tokens(reqs2) == expected
+    assert tight.cache.used_pages == 0, "retired pages leaked"
+
+
+def test_join_on_arrival_mid_run():
+    """A request submitted while the engine decodes is admitted at the
+    next step boundary (continuous), but waits for the batch to drain
+    under static batching."""
+    late = Request(rid=99, prompt=np.array([5, 6, 7], np.int32),
+                   max_new_tokens=2)
+    eng = _engine("continuous")           # 4 lanes, 3 running: one free
+    eng.submit_many(_requests(seed=4, n=3, max_new=(6, 10)))
+    for _ in range(3):
+        eng.step()
+    eng.submit(late)
+    eng.step()
+    assert late.state in (RequestState.PREFILL, RequestState.DECODE), \
+        "continuous engine must admit on the next step"
+    eng.run()
+    assert late.state is RequestState.DONE
+
+    late2 = Request(rid=99, prompt=np.array([5, 6, 7], np.int32),
+                    max_new_tokens=2)
+    st = _engine("static")
+    st.submit_many(_requests(seed=4, n=3, max_new=(6, 10)))
+    for _ in range(3):
+        st.step()
+    st.submit(late2)
+    st.step()
+    assert late2.state is RequestState.WAITING, \
+        "static engine admitted into a live batch"
+    st.run()
+    assert late2.state is RequestState.DONE
+
+
+def test_ingest_prefill_matches_streaming():
+    """The disaggregated-prefill path (batch prompt pass + KV scatter,
+    the PR 2 hop's payload) must continue exactly like inline streaming
+    prefill."""
+    prompts = np.random.default_rng(5).integers(
+        0, CFG.vocab, (3, 6)).astype(np.int32)
+    s_reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+              for i in range(3)]
+    eng = _engine(lanes=3)
+    eng.submit_many(s_reqs)
+    eng.run()
+
+    k, v, last = PM.prefill(CFG, PARAMS, jnp.asarray(prompts))
+    i_reqs = [Request(rid=i, prompt=prompts[i], max_new_tokens=6)
+              for i in range(3)]
+    eng2 = _engine(lanes=3)
+    for i, r in enumerate(i_reqs):
+        eng2.ingest_prefill(r, k[:, i], v[:, i], last[i])
+    stats = eng2.run()
+    assert _tokens(i_reqs) == _tokens(s_reqs)
+    assert stats["ingested_tokens"] == 18
+    assert stats["prefill_tokens"] == 0
+
+
+def test_seq_cap_truncates_only_the_overgrown_request():
+    """A sequence that outgrows max_pages_per_seq is truncated (retired
+    with what it has) — it must NOT evict innocent neighbours, and the
+    rest of the workload completes untouched. A prompt that can never
+    fit the cap is rejected at admission instead of wedging the queue."""
+    from repro.serve import SequenceCapExceeded
+    # maxp=2 (16-token cap), plenty of pool pages
+    eng = ContinuousEngine(CFG, PARAMS, lanes=2, num_pages=32,
+                           max_pages_per_seq=2)
+    hog = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=100)           # wants 104 tokens
+    ok = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                 max_new_tokens=5)
+    eng.submit_many([hog, ok])
+    stats = eng.run()
+    assert stats["truncated"] == 1
+    assert stats["preemptions"] == 0, "cap truncation evicted a neighbour"
+    assert hog.state is RequestState.DONE
+    # cap token-slots minus prompt, +1: the last generated token is
+    # appended by the final step but never written back to the cache
+    assert len(hog.generated) == 2 * CFG.page_size - 4 + 1
+    assert len(ok.generated) == 5
+    assert eng.cache.used_pages == 0
+
+    # un-fittable prompt: rejected, queue keeps moving
+    eng2 = ContinuousEngine(CFG, PARAMS, lanes=2, num_pages=32,
+                            max_pages_per_seq=2)
+    bad = Request(rid=0, prompt=np.zeros(3 * CFG.page_size, np.int32),
+                  max_new_tokens=2)
+    good = Request(rid=1, prompt=np.arange(4, dtype=np.int32),
+                   max_new_tokens=3)
+    eng2.submit_many([bad, good])
+    stats2 = eng2.run()
+    assert stats2["rejected"] == 1
+    assert bad.state is RequestState.DONE and bad.generated == []
+    assert len(good.generated) == 3
+
+    # the cache-level signal is distinct from pool exhaustion
+    cache = PagedKVCache(num_pages=32, page_size=4, n_layers=1,
+                         n_kv_heads=1, head_dim=4, max_pages_per_seq=1)
+    cache.alloc_seq(0, 4)
+    with pytest.raises(SequenceCapExceeded):
+        cache.ensure_append(0)
+
+
+def test_page_budget_too_small_fails_loud():
+    """A budget that cannot hold even one sequence must raise, not
+    livelock on preempt-readmit cycles."""
+    eng = ContinuousEngine(CFG, PARAMS, lanes=2, num_pages=3,
+                           max_pages_per_seq=8)
+    eng.submit(Request(rid=0,
+                       prompt=np.zeros(2 * CFG.page_size, np.int32),
+                       max_new_tokens=4))
+    with pytest.raises(PageExhausted):
+        eng.run()
+
+
+def test_admission_watermark_protects_running():
+    """Joining sequences must not evict running ones: admission requires
+    the whole prompt (+1 token) in currently-free pages."""
+    eng = _engine(lanes=4, num_pages=8, maxp=4)   # 7 usable pages
+    eng.submit_many([Request(rid=i, prompt=np.zeros(
+        2 * CFG.page_size, np.int32), max_new_tokens=2)
+        for i in range(4)])
+    stats = eng.run()
+    assert stats["preemptions"] == 0
+    assert stats["generated_tokens"] == 8
+
+
+def test_slice_hbm_accounting():
+    from repro.core import DevicePool
+    from repro.core.slice import Slice
+    pool = DevicePool.virtual(2)
+    s = Slice(name="serve", pool=pool, n_devices=1)
+    s.attach_device()
+    eng = ContinuousEngine(CFG, PARAMS, lanes=2, num_pages=16,
+                           slice_=s)
+    assert s.hbm["kv_pages"] == eng.cache.hbm_bytes
+    assert s.hbm_bytes() == eng.cache.hbm_bytes > 0
+    s.teardown()
+    assert s.hbm_bytes() == 0, "destroy_machine must drop reservations"
+
+
+def test_zipf_workload_shape():
+    reqs = make_zipf_requests(CFG.vocab, np.random.default_rng(0), 200, 8,
+                              max_new_cap=64)
+    lens = [r.max_new_tokens for r in reqs]
+    assert min(lens) >= 1 and max(lens) <= 64
+    assert np.mean(lens) < np.max(lens) / 3, \
+        "workload is not ragged enough to exercise the straggler effect"
+
+
+# ---------------------------------------------------------------------------
+# launch-driver integration
+# ---------------------------------------------------------------------------
+
+def test_run_serving_continuous_slice_path():
+    from repro.launch.serve import run_serving_continuous
+    out = run_serving_continuous(n_requests=8, lanes=4, prompt_len=4,
+                                 max_new_cap=8)
+    assert out["continuous"]["generated_tokens"] == \
+        out["static"]["generated_tokens"] > 0
+    assert out["hbm_bytes"] > 0
+    assert out["breakdown"]["run_task"] > 0
+
+
+def test_run_serving_continuous_disaggregated_prefill():
+    """--microbatches > 1: prompt KV is computed on the prefill sub-slice
+    and hops the PR 2 fabric into the decode engine; tokens must match
+    the single-slice path."""
+    from repro.launch.serve import run_serving_continuous
+    base = run_serving_continuous(n_requests=8, lanes=4, prompt_len=4,
+                                  max_new_cap=8, compare_static=False)
+    out = run_serving_continuous(n_requests=8, lanes=4, prompt_len=4,
+                                 max_new_cap=8, microbatches=4)
+    c, b = out["continuous"], base["continuous"]
+    assert c["generated_tokens"] == b["generated_tokens"]
+    assert c["ingested_tokens"] == 8 * 4      # every prompt via the hop
+    assert c["prefill_tokens"] == 0
+    assert out["transfers"]["hops"] >= 4      # one per prefill microbatch
+    assert out["transfers"]["bytes"] > 0
